@@ -1,0 +1,63 @@
+"""Encoder-iteration sweep (S in Algorithm 1) — the cost/quality knob behind
+the paper's O(NE(K+S)) complexity claim.
+
+Shows cosine compression efficiency vs S for both encoder-update rules:
+the paper's plain GD and this repo's RMS-normalized variant (beyond-paper,
+DESIGN.md §8.5). One simulation step throughout — the paper's "single-step"
+refers to the simulation depth, not S.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CompressorConfig
+from repro.core import flat, threesfc
+from repro.data.synthetic import make_class_image_dataset
+from repro.models.build import vision_syn_spec
+from repro.models.cnn import MNIST_SPEC, make_paper_model
+
+
+def run(quick: bool = True, out_dir: str = "experiments/results") -> Dict:
+    model = make_paper_model("mlp", MNIST_SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = make_class_image_dataset(jax.random.PRNGKey(1), 512, (28, 28, 1), 10)
+    p = params
+    for i in range(5):
+        g = jax.grad(model.loss)(p, {"x": jnp.asarray(ds.x[i*64:(i+1)*64]),
+                                     "y": jnp.asarray(ds.y[i*64:(i+1)*64])})
+        p = jax.tree.map(lambda a, b: a - 0.01*b, p, g)
+    target = flat.tree_sub(params, p)
+    spec = vision_syn_spec(MNIST_SPEC, CompressorConfig(syn_batch=1))
+
+    steps_list = [1, 2, 5, 10] if quick else [1, 2, 5, 10, 20, 50]
+    results: Dict = {"normalized": {}, "plain_gd": {}}
+    for steps in steps_list:
+        for norm in (True, False):
+            syn0 = threesfc.init_syn(jax.random.PRNGKey(2), spec)
+            res = threesfc.encode(model.syn_loss, params, target, syn0,
+                                  steps=steps, lr=0.1, normalize_updates=norm)
+            key = "normalized" if norm else "plain_gd"
+            results[key][steps] = abs(float(res.cosine))
+    print("\n== S-sweep: encoder iterations vs compression efficiency ==")
+    print("S      | normalized | plain GD (paper)")
+    for s in steps_list:
+        print(f"{s:6d} | {results['normalized'][s]:10.4f} "
+              f"| {results['plain_gd'][s]:8.4f}")
+    mono = all(results["normalized"][steps_list[i+1]]
+               >= results["normalized"][steps_list[i]] - 0.02
+               for i in range(len(steps_list) - 1))
+    print(f"  [{'PASS' if mono else 'FAIL'}] efficiency grows with S "
+          f"(O(K+S) cost knob)")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "ssweep.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,172 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json + experiments/results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.collate_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+RES = os.path.join(ROOT, "experiments", "results")
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_section() -> str:
+    lines = ["## §Dry-run — (arch × shape) × {16×16, 2×16×16}", ""]
+    for mesh in ("16x16", "2x16x16"):
+        files = sorted(glob.glob(os.path.join(DRY, f"*__{mesh}.json")))
+        if not files:
+            continue
+        lines += [f"### mesh {mesh} ({256 if mesh=='16x16' else 512} chips)", "",
+                  "| arch | shape | lower+compile s | args/dev GiB | peak/dev GiB "
+                  "| HLO GFLOPs/dev | coll MB/dev |",
+                  "|---|---|---|---|---|---|---|"]
+        for fn in files:
+            r = json.load(open(fn))
+            m = r["memory_per_dev"]
+            roof = r["roofline"]
+            coll = sum(roof["coll_bytes_per_dev"].values())
+            lines.append(
+                f"| {r['arch']} | {r['shape']} "
+                f"| {r['lower_s'] + r['compile_s']:.0f} "
+                f"| {_fmt_bytes(m['argument_bytes'])} "
+                f"| {_fmt_bytes(m['peak_bytes'])} "
+                f"| {roof['flops_per_dev']/1e9:.1f} "
+                f"| {coll/2**20:.2f} |")
+        lines.append("")
+    lines += ["Documented skip: seamless-m4t-medium × long_500k (full "
+              "cross-attention enc-dec has no 500k decode use-case — DESIGN.md §5). "
+              "All other pairs lower AND compile on both meshes.", ""]
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    files = sorted(glob.glob(os.path.join(DRY, "*__16x16.json")))
+    lines = ["## §Roofline — per (arch × shape), single-pod 16×16", "",
+             "Terms in seconds/step on v5e (197 TF/s bf16, 819 GB/s HBM, "
+             "50 GB/s ICI); per-device post-partition program.", "",
+             "| arch | shape | compute_s | memory_s | collective_s | dominant "
+             "| useful (6ND/HLO) |",
+             "|---|---|---|---|---|---|---|"]
+    doms = {"compute": 0, "memory": 0, "collective": 0}
+    for fn in files:
+        r = json.load(open(fn))
+        roof = r["roofline"]
+        doms[roof["dominant"]] += 1
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {roof['compute_s']:.3e} "
+            f"| {roof['memory_s']:.3e} | {roof['collective_s']:.3e} "
+            f"| **{roof['dominant']}** | {roof['useful_ratio']:.3f} |")
+    lines += ["", f"Dominant-term census: {doms}", ""]
+    return "\n".join(lines)
+
+
+def repro_section() -> str:
+    lines = ["## §Repro — paper claims C1–C6 (reduced scale, synthetic data)", ""]
+    t2 = os.path.join(RES, "table2.json")
+    if os.path.exists(t2):
+        data = json.load(open(t2))
+        lines += ["### Table 2 analogue — final acc / acc-AUC (compression ratio)",
+                  "",
+                  "C1 is a convergence-RATE claim: the acc-curve AUC resolves "
+                  "orderings that the saturated final point hides.", "",
+                  "| cell | fedavg | dgc | signsgd | stc | 3sfc |", "|---|---|---|---|---|---|"]
+        for cell, res in data.items():
+            row = [cell]
+            for m in ("fedavg", "dgc", "signsgd", "stc", "threesfc"):
+                auc = res[m].get("auc")
+                a = f"{res[m]['acc']:.3f}"
+                if auc is not None:
+                    a += f"/{auc:.3f}"
+                row.append(f"{a} ({res[m]['ratio']:.0f}x)")
+            lines.append("| " + " | ".join(row) + " |")
+        lines.append("")
+    t3 = os.path.join(RES, "table3.json")
+    if os.path.exists(t3):
+        data = json.load(open(t3))
+        lines += ["### Table 3 analogue — 3SFC budget scaling vs STC (C2)", "",
+                  "| cell | method | final acc | ratio |", "|---|---|---|---|"]
+        for cell, res in data.items():
+            for m, v in res.items():
+                lines.append(f"| {cell} | {m} | {v['acc']:.4f} | {v['ratio']:.1f}x |")
+        lines.append("")
+    t4 = os.path.join(RES, "table4.json")
+    if os.path.exists(t4):
+        data = json.load(open(t4))
+        lines += ["### Table 4 analogue — 3SFC ablation (MLP+MNIST-like)", "",
+                  "| variant | final acc |", "|---|---|"]
+        for k, v in data.items():
+            lines.append(f"| {k} | {v['acc']:.4f} |")
+        lines.append("")
+    f7 = os.path.join(RES, "fig7.json")
+    if os.path.exists(f7):
+        import numpy as np
+        data = json.load(open(f7))
+        lines += ["### Fig 7 analogue — mean compression efficiency (cosine)", ""]
+        for k, v in data.items():
+            lines.append(f"* {k}: {float(np.mean(v)):.4f}")
+        lines.append("")
+    e2e = os.path.join(ROOT, "experiments", "e2e_train", "metrics.jsonl")
+    if os.path.exists(e2e):
+        recs = [json.loads(l) for l in open(e2e)]
+        if recs:
+            best = max(recs, key=lambda r: r["acc"])
+            last = recs[-1]
+            lines += ["### End-to-end driver (examples/fl_training.py "
+                      "→ repro.launch.train)", "",
+                      f"200 rounds × 20 non-iid clients, MLP + 3SFC @ 250.6×: "
+                      f"loss {recs[0]['loss']:.3f} → {last['loss']:.3f}, "
+                      f"best test acc {best['acc']:.3f} (round {best['round']}), "
+                      f"{last['elapsed_s']:.0f}s on 1 CPU core; checkpoint at "
+                      "experiments/e2e_train/final.", ""]
+    fs = os.path.join(RES, "fedsynth_collapse.json")
+    if os.path.exists(fs):
+        data = json.load(open(fs))
+        lines += ["### Fig 2/3 + Table 1 analogue — FedSynth instability", "",
+                  "| unroll depth | grad-through-unroll norm | fit cosine |",
+                  "|---|---|---|"]
+        for u, v in sorted(data["fedsynth"].items(), key=lambda kv: int(kv[0])):
+            lines.append(f"| {u} | {v['syn_grad_norm']:.4g} | {v['cosine']:+.4f} |")
+        lines.append(f"\n3SFC (single simulation step) fit cosine: "
+                     f"{data['threesfc']['cosine']:+.4f}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    parts = [
+        "# EXPERIMENTS — 3SFC reproduction + multi-pod dry-run + roofline + perf",
+        "",
+        "Reproduce: `python -m benchmarks.run`, `python -m repro.launch.dryrun "
+        "--all [--multi-pod]`, `python -m benchmarks.collate_experiments`.",
+        "",
+        "Hardware model: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM, "
+        "~50 GB/s ICI. Container is CPU-only: §Repro numbers are *executed* "
+        "(reduced scale, synthetic data — orderings/gaps are the claims, "
+        "DESIGN.md §9); §Dry-run/§Roofline come from AOT "
+        "`.lower().compile()` artifacts.",
+        "",
+        repro_section(),
+        dryrun_section(),
+        roofline_section(),
+    ]
+    perf_path = os.path.join(ROOT, "experiments", "PERF.md")
+    if os.path.exists(perf_path):
+        parts.append(open(perf_path).read())
+    else:
+        parts.append("## §Perf — hillclimb logs\n\n*pending*\n")
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

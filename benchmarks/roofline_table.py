@@ -1,0 +1,62 @@
+"""Collate experiments/dryrun/*.json into the §Roofline table (EXPERIMENTS.md).
+
+Run AFTER ``python -m repro.launch.dryrun --all`` has produced the per-pair
+JSONs. Prints the 40-pair table with the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, and a one-line "what would move it" note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+_NOTES = {
+    "compute": "bigger per-chip tile / fewer remat recomputes",
+    "memory": "fuse elementwise chains; bf16 residuals; bigger arithmetic intensity",
+    "collective": "shard to cut gathered bytes; overlap collectives with compute",
+}
+
+
+def load(mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    roof = r["roofline"]
+    return (f"| {r['arch']:<22} | {r['shape']:<11} "
+            f"| {roof['compute_s']:.3e} | {roof['memory_s']:.3e} "
+            f"| {roof['collective_s']:.3e} | {roof['dominant']:<10} "
+            f"| {roof['useful_ratio']:.3f} |")
+
+
+def run(mesh: str = "16x16", out_path: str = None) -> str:
+    rows = load(mesh)
+    lines = [
+        f"Roofline terms per (arch x shape) on the {mesh} mesh "
+        f"(seconds per step; v5e 197TF/819GBps/50GBps):",
+        "",
+        "| arch                   | shape       | compute_s | memory_s  "
+        "| collect_s | dominant   | useful |",
+        "|------------------------|-------------|-----------|-----------"
+        "|-----------|------------|--------|",
+    ]
+    for r in rows:
+        lines.append(fmt_row(r))
+    txt = "\n".join(lines)
+    print(txt)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(txt + "\n")
+    return txt
+
+
+if __name__ == "__main__":
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,46 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (CPU-friendly)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale rounds
+    PYTHONPATH=src python -m benchmarks.run --only table2,fig7
+
+Dry-run/roofline tables are produced separately (they need the 512-device
+XLA flag): ``python -m repro.launch.dryrun --all`` then
+``python -m benchmarks.roofline_table``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_fedsynth, bench_fig1, bench_fig7, bench_kernels,
+                        bench_ssweep, bench_table2, bench_table3, bench_table4)
+
+BENCHES = {
+    "fig1": bench_fig1.run,          # convergence vs rate
+    "table2": bench_table2.run,      # 5-method accuracy x ratio grid
+    "table3": bench_table3.run,      # 3SFC budget scaling vs STC
+    "table4": bench_table4.run,      # EF / B / K ablation
+    "fig7": bench_fig7.run,          # compression efficiency curves
+    "fedsynth": bench_fedsynth.run,  # table1 + fig2/3 collapse
+    "ssweep": bench_ssweep.run,      # encoder-iteration knob (Algorithm 1 S)
+    "kernels": bench_kernels.run,    # fused-kernel pass accounting
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default="")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+    t0 = time.time()
+    for name in names:
+        print(f"\n######## {name} " + "#" * (70 - len(name)))
+        BENCHES[name](quick=not args.full)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§Perf hillclimb driver: runs tagged dry-run variants for the three
+selected pairs and prints before/after roofline terms.
+
+Each variant runs in a SUBPROCESS (XLA device-count flags + the activation-
+sharding global are per-process). Results land in experiments/dryrun/ with
+the variant tag; collate with scripts/perf_report.py.
+
+    PYTHONPATH=src python scripts/perf_hillclimb.py [h1|h2|h3|all]
+"""
+import json
+import subprocess
+import sys
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (arch, shape, tag, variant_json, mesh)
+RUNS = {
+    # H1 — llama4-scout train_4k: worst memory/dev (baseline peak 185 GiB vs
+    # 16 GiB HBM). Levers: bf16 params+EF (2x on the two biggest residents),
+    # then a 4x64 mesh reshape (4 clients/pod x 64-way model parallel:
+    # per-device param/EF footprint /4, experts shard over ff-dim).
+    "h1": [
+        ("llama4-scout-17b-a16e", "train_4k", "bf16",
+         {"param_dtype": "bfloat16", "ef_dtype": "bfloat16"}, ""),
+        ("llama4-scout-17b-a16e", "train_4k", "bf16-mesh4x64",
+         {"param_dtype": "bfloat16", "ef_dtype": "bfloat16"}, "4,64"),
+    ],
+    # H2 — llama4-scout prefill_32k: most collective-bound pair (6.96 s).
+    # Lever: explicit head-axis sharding constraints through attention/MoE
+    # (kills the involuntary full-rematerialization copies GSPMD inserts).
+    "h2": [
+        ("llama4-scout-17b-a16e", "prefill_32k", "actshard",
+         {"act_shard": True}, ""),
+        ("internvl2-1b", "prefill_32k", "actshard",
+         {"act_shard": True}, ""),
+    ],
+    # H3 — tinyllama train_4k: the paper-representative pair. Lever: fused
+    # server decode — all-gather tiny (D_syn, s) payloads instead of
+    # all-reducing the full per-client gradient reconstruction.
+    "h3": [
+        ("tinyllama-1.1b", "train_4k", "fused",
+         {"fused_decode": True}, ""),
+        ("qwen1.5-0.5b", "train_4k", "fused",
+         {"fused_decode": True}, ""),
+    ],
+}
+
+
+def run_one(arch, shape, tag, variant, mesh):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--tag", tag, "--variant", json.dumps(variant)]
+    if mesh:
+        cmd += ["--mesh", mesh]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    print("::", " ".join(cmd))
+    subprocess.run(cmd, check=True, env=env, cwd=ROOT)
+
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    keys = list(RUNS) if which == "all" else [which]
+    for k in keys:
+        for run in RUNS[k]:
+            run_one(*run)
+
+
+if __name__ == "__main__":
+    main()

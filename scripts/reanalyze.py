@@ -1,0 +1,38 @@
+"""Re-derive roofline fields in experiments/dryrun/*.json from the archived
+per-device HLO (.hlo.gz) — analyzer iterations without recompiling.
+
+    PYTHONPATH=src python scripts/reanalyze.py
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.utils import roofline as rl
+from repro.utils import hlo_analyzer as H
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def main():
+    for jf in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        hf = jf[:-5] + ".hlo.gz"
+        if not os.path.exists(hf):
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        r = json.load(open(jf))
+        tot = H.analyze(hlo)
+        roof = rl.Roofline(tot.flops, tot.bytes,
+                           {k: int(v) for k, v in tot.coll_bytes.items()},
+                           r["chips"], r["roofline"].get("model_flops", 0.0))
+        r["roofline"] = roof.as_dict()
+        json.dump(r, open(jf, "w"), indent=2)
+        print(f"reanalyzed {os.path.basename(jf)}: dominant={roof.dominant}")
+
+
+if __name__ == "__main__":
+    main()

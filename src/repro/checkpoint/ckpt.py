@@ -1,0 +1,68 @@
+"""Pytree checkpointing: flat .npz payload + JSON manifest of the treedef.
+
+Keys are the '/'-joined path of each leaf; the manifest records tree
+structure, shapes, and dtypes so loads are validated. Works for params,
+optimizer state, EF residuals, FLState — any pytree of arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    out = {}
+
+    def visit(path, leaf):
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path) or "_root"
+        arr = np.asarray(leaf)
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.uint32, np.uint8, np.int8, np.bool_,
+                             np.float16, np.uint16, np.int16, np.uint64):
+            arr = arr.astype(np.float32)      # bf16 etc: exact in f32
+        out[key] = arr
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: PyTree, meta: Dict = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, like: PyTree) -> PyTree:
+    """Load into the structure of ``like`` (validates shapes/dtypes)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def visit(p, leaf):
+        key = "/".join(
+            str(x.key) if isinstance(x, jax.tree_util.DictKey)
+            else str(getattr(x, "idx", x)) for x in p) or "_root"
+        arr = data[key]
+        want = manifest["leaves"][key]
+        assert list(arr.shape) == want["shape"], (key, arr.shape, want)
+        assert tuple(arr.shape) == tuple(jnp.shape(leaf)), \
+            f"{key}: ckpt {arr.shape} vs model {jnp.shape(leaf)}"
+        return jnp.asarray(arr, dtype=jnp.result_type(leaf))
+
+    return jax.tree_util.tree_map_with_path(visit, like)

@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    CompressorConfig,
+    FLConfig,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)

@@ -1,0 +1,2 @@
+"""Core: the paper's contribution — 3SFC + EF + baseline compressors."""
+from repro.core import baselines, error_feedback, fedsynth, flat, threesfc  # noqa: F401

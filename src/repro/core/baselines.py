@@ -1,0 +1,111 @@
+"""Baseline gradient compressors the paper compares against.
+
+All operate on *flat* float32 vectors (see ``flat.Flattener``) and return
+``(payload, recon)`` where ``recon`` is the server-side reconstruction —
+exactly what the decoder would produce from the payload. Budget accounting
+(``payload_floats``) follows the paper's conventions:
+
+* top-k (DGC):  k values + k indices  -> 2k float-equivalents
+* rand-k:       k values + 1 seed     -> k + 1 (indices regenerable from seed)
+* signSGD(+EF): 1 bit/coord + 1 scale -> d/32 + 1
+* STC:          top-k + binarized values -> k (indices) + k/32 (signs) + 1 (mu)
+* identity (FedAvg): d
+
+On TPU, exact global top-k over O(d) is sort-bound; we use the Pallas
+threshold-select kernel (``repro.kernels.topk_mask``) when available and fall
+back to ``jax.lax.top_k`` here. Reconstruction semantics are identical.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Payload(NamedTuple):
+    """Wire-format stand-in. ``floats`` is the accounted payload size."""
+
+    data: tuple
+    floats: float
+
+
+# ---------------------------------------------------------------------------
+# identity (FedAvg)
+# ---------------------------------------------------------------------------
+
+
+def identity_compress(vec: jax.Array) -> Tuple[Payload, jax.Array]:
+    return Payload((vec,), float(vec.size)), vec
+
+
+# ---------------------------------------------------------------------------
+# top-k (DGC)
+# ---------------------------------------------------------------------------
+
+
+def topk_compress(vec: jax.Array, k: int) -> Tuple[Payload, jax.Array]:
+    """Keep the k largest-magnitude coordinates (DGC sparsifier)."""
+    k = max(1, min(int(k), vec.size))
+    mag = jnp.abs(vec)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = vec[idx]
+    recon = jnp.zeros_like(vec).at[idx].set(vals)
+    return Payload((vals, idx), 2.0 * k), recon
+
+
+# ---------------------------------------------------------------------------
+# rand-k
+# ---------------------------------------------------------------------------
+
+
+def randk_compress(key: jax.Array, vec: jax.Array, k: int) -> Tuple[Payload, jax.Array]:
+    k = max(1, min(int(k), vec.size))
+    idx = jax.random.choice(key, vec.size, shape=(k,), replace=False)
+    vals = vec[idx]
+    recon = jnp.zeros_like(vec).at[idx].set(vals)
+    return Payload((vals, idx), float(k) + 1.0), recon
+
+
+# ---------------------------------------------------------------------------
+# signSGD (with mean-|x| scale, as in EF-signSGD)
+# ---------------------------------------------------------------------------
+
+
+def signsgd_compress(vec: jax.Array) -> Tuple[Payload, jax.Array]:
+    scale = jnp.mean(jnp.abs(vec))
+    signs = jnp.sign(vec)
+    # 0-sign coords reconstruct to 0 (sign(0) == 0): harmless and exact.
+    recon = scale * signs
+    return Payload((signs, scale), vec.size / 32.0 + 1.0), recon
+
+
+# ---------------------------------------------------------------------------
+# STC: sparse ternary compression = top-k + binarize kept values to mean
+# ---------------------------------------------------------------------------
+
+
+def stc_compress(vec: jax.Array, k: int) -> Tuple[Payload, jax.Array]:
+    k = max(1, min(int(k), vec.size))
+    mag = jnp.abs(vec)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = vec[idx]
+    mu = jnp.mean(jnp.abs(vals))
+    tern = mu * jnp.sign(vals)
+    recon = jnp.zeros_like(vec).at[idx].set(tern)
+    return Payload((jnp.sign(vals), idx, mu), k + k / 32.0 + 1.0), recon
+
+
+# ---------------------------------------------------------------------------
+# budget helpers
+# ---------------------------------------------------------------------------
+
+
+def keep_k_for_budget(d: int, budget_floats: float) -> int:
+    """k such that a top-k payload (2k floats) fits the budget."""
+    return max(1, int(budget_floats // 2))
+
+
+def compression_rate(payload_floats: float, d: int) -> float:
+    """Paper Eq. 1: compressed size / uncompressed size."""
+    return payload_floats / float(d)

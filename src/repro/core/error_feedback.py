@@ -1,0 +1,40 @@
+"""Error feedback (EF) — paper Eq. 6, generic over any compressor.
+
+EF maintains a per-client residual ``e`` (same shape as the flat gradient).
+Each round the client compresses ``u = g + e`` and keeps the part the
+compressor dropped: ``e' = u - decode(encode(u))``.
+
+The key invariant (tested property): the *telescoped* sum of reconstructions
+equals the telescoped sum of true updates minus the final residual:
+
+    sum_t recon_t = sum_t g_t + e_0 - e_T
+
+so no gradient mass is ever lost, only delayed.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+def ef_step(
+    compress_fn: Callable[[jax.Array], Tuple[object, jax.Array]],
+    g: jax.Array,
+    e: jax.Array,
+    enabled: bool = True,
+) -> Tuple[object, jax.Array, jax.Array]:
+    """One EF round. Returns (payload, recon, new_residual).
+
+    With ``enabled=False`` the residual is pinned to zero (paper's w/o-EF
+    ablation row).
+    """
+    u = g + e if enabled else g
+    payload, recon = compress_fn(u)
+    e_new = u - recon if enabled else e
+    return payload, recon, e_new

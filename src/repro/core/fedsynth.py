@@ -1,0 +1,80 @@
+"""FedSynth-style multi-step distillation baseline (what 3SFC fixes).
+
+The method of Goetz & Tewari / Hu et al.: synthesize data such that *K
+unrolled SGD steps* on the synthetic batch, starting from ``w^t``, land near
+the true local weights ``w_i^t``. The objective is the ℓ₂ distance between
+simulated and real weights — differentiated through the whole unroll
+(grad-through-K-grads).
+
+The paper shows (Fig. 2/3, Table 1) this collapses at high compression on
+non-trivial models: gradients through the unroll explode as they
+backpropagate to the early simulation steps. We reproduce that failure mode
+as a benchmark (``benchmarks.fedsynth_collapse``) — per-unroll-step syn-grad
+norms are surfaced so the explosion is observable, mirroring Fig. 3.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat
+from repro.core.threesfc import LossFn, SynData
+
+
+class FedSynthResult(NamedTuple):
+    syn: SynData
+    recon: flat.PyTree               # w^t - simulate(syn) : the decoded update
+    l2: jax.Array                    # final objective value
+    syn_grad_norm: jax.Array         # grad-through-unroll norm (explosion metric)
+
+
+def _simulate(loss_fn: LossFn, params: flat.PyTree, syn: SynData, k: int, lr: float):
+    """K unrolled SGD steps on the synthetic batch from ``params``."""
+
+    def step(w, _):
+        g = jax.grad(loss_fn)(w, syn)
+        return flat.tree_axpy(-lr, g, w), None
+
+    w_sim, _ = jax.lax.scan(step, params, None, length=k)
+    return w_sim
+
+
+def encode(
+    loss_fn: LossFn,
+    params: flat.PyTree,
+    target: flat.PyTree,             # g_i^t = w^t - w_i^t
+    syn0: SynData,
+    *,
+    unroll_steps: int = 5,
+    opt_steps: int = 10,
+    lr: float = 0.01,
+    syn_lr: float = 0.1,
+) -> FedSynthResult:
+    """Optimize syn data so the K-step simulated update matches ``target``."""
+
+    def objective(syn: SynData) -> jax.Array:
+        w_sim = _simulate(loss_fn, params, syn, unroll_steps, lr)
+        sim_update = flat.tree_sub(params, w_sim)            # w^t - w_sim
+        return flat.tree_sqnorm(flat.tree_sub(sim_update, target))
+
+    grad_obj = jax.grad(objective)
+
+    def step(syn, _):
+        g = grad_obj(syn)
+        gn = flat.tree_norm(g)
+        syn = SynData(*[p - syn_lr * gi for p, gi in zip(syn, g)])
+        return syn, gn
+
+    syn, gnorms = jax.lax.scan(step, syn0, None, length=opt_steps)
+
+    w_sim = _simulate(loss_fn, params, syn, unroll_steps, lr)
+    recon = flat.tree_sub(params, w_sim)
+    l2 = flat.tree_sqnorm(flat.tree_sub(recon, target))
+    return FedSynthResult(syn, recon, l2, gnorms[-1])
+
+
+def decode(loss_fn: LossFn, params: flat.PyTree, syn: SynData, k: int, lr: float) -> flat.PyTree:
+    w_sim = _simulate(loss_fn, params, syn, k, lr)
+    return flat.tree_sub(params, w_sim)

@@ -1,0 +1,97 @@
+"""Pytree <-> flat-vector utilities and tree algebra.
+
+Compressors in this package operate on *flat* float32 vectors — the
+concatenation of every leaf of the gradient pytree. ``Flattener`` records
+shapes/dtypes once so compress/decompress round-trips are exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+class Flattener:
+    """Round-trippable pytree <-> 1-D float32 vector mapping.
+
+    The mapping is static (shapes/dtypes/treedef captured at construction),
+    so ``flatten``/``unflatten`` are jit-safe closures.
+    """
+
+    def __init__(self, tree: PyTree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        self.treedef = treedef
+        self.shapes: List[Tuple[int, ...]] = [jnp.shape(l) for l in leaves]
+        self.dtypes = [jnp.result_type(l) for l in leaves]
+        self.sizes = [int(np.prod(s)) if len(s) else 1 for s in self.shapes]
+        self.offsets = np.concatenate([[0], np.cumsum(self.sizes)]).tolist()
+        self.total = int(self.offsets[-1])
+
+    def flatten(self, tree: PyTree) -> jax.Array:
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves]
+        ) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(self, vec: jax.Array) -> PyTree:
+        leaves = []
+        for shape, dtype, off, size in zip(
+            self.shapes, self.dtypes, self.offsets[:-1], self.sizes
+        ):
+            chunk = jax.lax.dynamic_slice_in_dim(vec, off, size)
+            leaves.append(chunk.reshape(shape).astype(dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+# --- tree algebra (used where flattening would force a big concat) ---------
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leafwise."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    """Sum of elementwise products over all leaves, accumulated in f32."""
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    leaves = jax.tree_util.tree_leaves(parts)
+    return sum(leaves) if leaves else jnp.zeros((), jnp.float32)
+
+
+def tree_sqnorm(a: PyTree) -> jax.Array:
+    return tree_dot(a, a)
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_cosine(a: PyTree, b: PyTree, eps: float = 1e-12) -> jax.Array:
+    return tree_dot(a, b) / (tree_norm(a) * tree_norm(b) + eps)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_size(a: PyTree) -> int:
+    """Total number of scalars in the tree (static)."""
+    return sum(int(np.prod(jnp.shape(l)) or 1) for l in jax.tree_util.tree_leaves(a))

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    ClassImageDataset,
+    make_class_image_dataset,
+    make_token_dataset,
+)
+from repro.data.partition import dirichlet_partition, partition_stats

@@ -1,0 +1,71 @@
+"""Synthetic datasets (the container is offline — see DESIGN.md §9).
+
+``make_class_image_dataset`` builds a class-conditional image problem with
+the paper's dataset shapes (28x28x1 MNIST-like, 32x32x3 CIFAR-like): each
+class c gets a fixed random template T_c; samples are
+``clip(T_c + sigma * noise)``. The task is genuinely learnable (linear probes
+reach high accuracy at low sigma; difficulty is tunable), so convergence-rate
+*orderings* between compressors — the paper's claims — are measurable.
+
+``make_token_dataset`` builds an LM stream with a planted bigram structure
+(next token = f(current) with noise) so CE decreases with learning.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ClassImageDataset(NamedTuple):
+    x: np.ndarray          # (N, H, W, C) float32 in [0, 1]
+    y: np.ndarray          # (N,) int32
+    num_classes: int
+
+
+def make_class_image_dataset(
+    key: jax.Array,
+    num_samples: int,
+    input_shape: Tuple[int, int, int],
+    num_classes: int,
+    sigma: float = 0.35,
+    template_scale: float = 1.0,
+    template_seed: int = 7,
+) -> ClassImageDataset:
+    """Templates come from ``template_seed`` (NOT ``key``) so that train and
+    test splits generated with different keys share the same class structure."""
+    ky, kn = jax.random.split(key, 2)
+    kt = jax.random.PRNGKey(template_seed)
+    templates = template_scale * jax.random.normal(kt, (num_classes, *input_shape))
+    y = jax.random.randint(ky, (num_samples,), 0, num_classes)
+    noise = sigma * jax.random.normal(kn, (num_samples, *input_shape))
+    x = jnp.clip(templates[y] * 0.5 + 0.5 + noise, 0.0, 1.0)
+    return ClassImageDataset(np.asarray(x, np.float32), np.asarray(y, np.int32),
+                             num_classes)
+
+
+def make_token_dataset(
+    key: jax.Array,
+    num_seqs: int,
+    seq_len: int,
+    vocab: int,
+    noise: float = 0.1,
+) -> np.ndarray:
+    """(num_seqs, seq_len) int32 with a planted random bigram map."""
+    kp, k0, kn, km = jax.random.split(key, 4)
+    bigram = jax.random.permutation(kp, vocab)
+    t0 = jax.random.randint(k0, (num_seqs,), 0, vocab)
+
+    def step(tok, k):
+        nxt = bigram[tok]
+        rnd = jax.random.randint(k, tok.shape, 0, vocab)
+        use_rnd = jax.random.bernoulli(jax.random.fold_in(k, 1), noise, tok.shape)
+        nxt = jnp.where(use_rnd, rnd, nxt)
+        return nxt, nxt
+
+    keys = jax.random.split(kn, seq_len - 1)
+    _, rest = jax.lax.scan(step, t0, keys)
+    seqs = jnp.concatenate([t0[None], rest], axis=0).T
+    return np.asarray(seqs, np.int32)

@@ -1,0 +1,3 @@
+from repro.fl.client import local_train
+from repro.fl.server import aggregate, server_update
+from repro.fl.round import FLState, fl_init, fl_round, make_fl_round

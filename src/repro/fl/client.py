@@ -1,0 +1,68 @@
+"""Client-side local training: K SGD steps via ``lax.scan``.
+
+``local_train`` consumes a stacked per-round batch pytree with leading axis
+K (one entry per local step). Each local step optionally splits its batch
+into ``microbatch`` gradient-accumulation slices (memory lever for the
+production train_4k lowering — see DESIGN.md §3).
+
+Returns ``g = w_global - w_local`` — the *accumulated update* with the
+paper's sign convention (Eq. 3: the server SUBTRACTS the aggregate).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat
+
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, jax.Array]], jax.Array]
+
+
+def _grad_microbatched(loss_fn: LossFn, params: PyTree, batch: PyTree,
+                       num_micro: int) -> Tuple[jax.Array, PyTree]:
+    """value_and_grad, optionally accumulated over leading-dim slices."""
+    if num_micro <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def slice_batch(b, i):
+        def f(x):
+            mb = x.shape[0] // num_micro
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        return jax.tree_util.tree_map(f, b)
+
+    def body(carry, i):
+        tot, acc = carry
+        v, g = jax.value_and_grad(loss_fn)(params, slice_batch(batch, i))
+        return (tot + v, flat.tree_add(acc, g)), None
+
+    zero = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (tot, acc), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero), jnp.arange(num_micro))
+    scale = 1.0 / num_micro
+    return tot * scale, flat.tree_scale(acc, scale)
+
+
+def local_train(
+    loss_fn: LossFn,
+    global_params: PyTree,
+    batches: PyTree,                 # leading axis K
+    lr: float,
+    *,
+    num_micro: int = 1,
+) -> Tuple[PyTree, jax.Array]:
+    """K local SGD steps from ``global_params``. Returns (g, mean_loss)."""
+
+    def step(w, batch):
+        v, grads = _grad_microbatched(loss_fn, w, batch, num_micro)
+        w = jax.tree_util.tree_map(
+            lambda p, gr: (p.astype(jnp.float32) - lr * gr.astype(jnp.float32)).astype(p.dtype),
+            w, grads)
+        return w, v
+
+    w_local, losses = jax.lax.scan(step, global_params, batches)
+    g = flat.tree_sub(global_params, w_local)          # w^t - w_i^t (paper sign)
+    g = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), g)
+    return g, jnp.mean(losses)

@@ -1,0 +1,30 @@
+"""Server-side aggregation G(·) and global-model update (paper Eq. 3/4/6)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def aggregate(recons: PyTree, weights: Optional[jax.Array] = None) -> PyTree:
+    """G over the leading client axis: arithmetic mean or |D_i|-weighted."""
+    if weights is None:
+        return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), recons)
+    w = weights / jnp.sum(weights)
+
+    def wmean(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(wb * x, axis=0)
+
+    return jax.tree_util.tree_map(wmean, recons)
+
+
+def server_update(global_params: PyTree, agg_update: PyTree,
+                  server_lr: float = 1.0) -> PyTree:
+    """w^{t+1} = w^t - lr * G(...). agg_update carries the paper's g sign."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) - server_lr * u.astype(jnp.float32)).astype(p.dtype),
+        global_params, agg_update)

@@ -1,0 +1,57 @@
+"""fused_cosine — one-HBM-pass (x·y, ||x||², ||y||²).
+
+The 3SFC encoder's Eq. 8/9 needs three O(d) reductions over the same two
+flat vectors. Done naively that is three HBM passes over 2·d floats; the
+gradient trees here are up to ~10^10 elements, so the pass count IS the cost
+(arithmetic intensity ≈ 0.25 FLOP/byte — deeply memory-bound). This kernel
+computes all three partial sums per VMEM tile in a single pass.
+
+Tiling: inputs are padded/reshaped to (rows, 1024) lanes (8·128-aligned);
+each grid step streams a (BLOCK_ROWS, 1024) tile of x and y through VMEM
+(2 × 512 KB) and accumulates into a (1, 3) f32 accumulator that lives in the
+output block (same block every step — the TPU grid is sequential, so this is
+the standard Pallas reduction idiom).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024
+BLOCK_ROWS = 128
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(x * y)
+    o_ref[0, 1] += jnp.sum(x * x)
+    o_ref[0, 2] += jnp.sum(y * y)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_cosine_2d(x2: jax.Array, y2: jax.Array, *, block_rows: int = BLOCK_ROWS,
+                    interpret: bool = True) -> jax.Array:
+    """x2, y2: (rows, LANES) with rows % block_rows == 0. Returns (3,) f32."""
+    rows = x2.shape[0]
+    assert rows % block_rows == 0 and x2.shape == y2.shape
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        interpret=interpret,
+    )(x2, y2)
+    return out[0]

@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + decode loop on a reduced config.
+
+Demonstrates the serving entry points actually executing (the production
+32k/500k shapes are exercised AOT by dryrun.py):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models.build import build_model
+from repro.models.encdec import EncDec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32, dest="prompt_len")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    cache_len = args.prompt_len + args.gen
+
+    t0 = time.time()
+    if isinstance(model, EncDec):
+        frames = jax.random.normal(key, (args.batch, cfg.num_mm_tokens,
+                                         cfg.d_model))
+        prefill = jax.jit(lambda p, f, t: model.prefill(p, f, t, cache_len))
+        logits, cache, t = prefill(params, frames, tokens)
+    else:
+        prefill = jax.jit(lambda p, t: model.prefill(p, t, cache_len))
+        logits, cache, t = prefill(params, tokens)
+    print(f"prefill: batch={args.batch} len={args.prompt_len} "
+          f"({time.time()-t0:.1f}s incl. compile)")
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, t + i)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"decoded {args.gen} tokens x {args.batch} seqs in {dt:.2f}s "
+          f"({args.gen*args.batch/max(dt,1e-9):.1f} tok/s incl. compile)")
+    print("sample token ids:", gen[0, :12].tolist())
+    assert bool(jnp.all(jnp.isfinite(logits))), "NaN logits"
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

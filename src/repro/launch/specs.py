@@ -1,0 +1,323 @@
+"""ShapeDtypeStruct input specs + sharding assignment for every entry point.
+
+``input_specs(arch, shape_name, mesh, ...)`` returns (entry_fn, args) where
+every arg leaf is a ``jax.ShapeDtypeStruct`` carrying a ``NamedSharding`` —
+the shannon/kernels pattern: weak-type-correct, shardable, and *allocation
+free*, so 30B-param configs lower on a CPU host.
+
+Entry kinds per input shape (base.INPUT_SHAPES):
+  train_4k     -> fl_round   (K local steps + 3SFC uplink, clients = pod·data)
+  prefill_32k  -> prefill
+  decode_32k   -> decode_step (1 token against a seq_len cache)
+  long_500k    -> decode_step (sub-quadratic archs; dense/moe use the
+                  sliding-window serving variant, see DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (CompressorConfig, FLConfig, INPUT_SHAPES,
+                                ModelConfig, ShapeConfig, get_config)
+from repro.core.compressor import make_compressor
+from repro.fl.round import FLState, make_fl_round
+from repro.launch import mesh as mesh_lib
+from repro.models import params as params_lib
+from repro.models.build import ENC_SYN_LEN, build_model, syn_loss_fn, syn_spec_for
+from repro.models.encdec import EncDec
+
+PyTree = Any
+
+# serving window for long_500k on full-attention archs (DESIGN.md §5)
+LONG_CTX_WINDOW = 8192
+# archs whose defining op is full cross-attention at short length: skip 500k
+LONG_CTX_SKIP = ("seamless-m4t-medium",)
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_sharding(tree_shapes: PyTree, spec_tree: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda sd, sp: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                            sharding=NamedSharding(mesh, sp)),
+        tree_shapes, spec_tree)
+
+
+def param_specs(model, mesh, client_axis=None) -> PyTree:
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = params_lib.sharding_specs(shapes, mesh, client_axis=client_axis)
+    return _with_sharding(shapes, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# cache sharding rules (path-based, mirrors models.*.init_cache structures)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes: PyTree, mesh) -> PyTree:
+    """Sharding for decode caches: batch -> 'data'(+'pod'); heads/width -> 'model'."""
+    msize = mesh_lib.axis_size(mesh, "model")
+    caxes = mesh_lib.client_axes(mesh)
+    dsize = mesh_lib.axis_size(mesh, "data") * mesh_lib.axis_size(mesh, "pod")
+    batch_spec = caxes if len(caxes) > 1 else "data"
+
+    def _bspec(n):
+        return batch_spec if _div(n, dsize) else None
+
+    def spec_for(path, leaf):
+        name = ""
+        for q in path:
+            if isinstance(q, jax.tree_util.GetAttrKey):
+                name = q.name
+            elif isinstance(q, jax.tree_util.DictKey):
+                name = str(q.key)
+        shape = leaf.shape
+        # leading (layers,) axis present on stacked caches (rank sniffing is
+        # safe here: every cache family is handled by field name)
+        def b(i):   # batch axis index: 1 if stacked, else 0
+            return i
+        if name in ("k", "v"):
+            # (L, B, len, KV, hd) or (B, len, KV, hd)
+            off = len(shape) - 4
+            spec = [None] * len(shape)
+            spec[off] = _bspec(shape[off])
+            if _div(shape[off + 2], msize):
+                spec[off + 2] = "model"
+            elif _div(shape[off + 3], msize):
+                spec[off + 3] = "model"
+            return P(*spec)
+        if name == "pos":
+            off = len(shape) - 2
+            spec = [None] * len(shape)
+            spec[off] = _bspec(shape[off])
+            return P(*spec)
+        if name == "conv_buf":
+            # (..., B, width-1, C)
+            off = len(shape) - 3
+            spec = [None] * len(shape)
+            spec[off] = _bspec(shape[off])
+            if _div(shape[-1], msize):
+                spec[-1] = "model"
+            return P(*spec)
+        if name == "state":
+            # (..., B, H, P, N)
+            off = len(shape) - 4
+            spec = [None] * len(shape)
+            spec[off] = _bspec(shape[off])
+            if _div(shape[off + 1], msize):
+                spec[off + 1] = "model"
+            return P(*spec)
+        if name == "h":
+            # (..., B, W)
+            spec = [None] * len(shape)
+            spec[-2] = _bspec(shape[-2])
+            if _div(shape[-1], msize):
+                spec[-1] = "model"
+            return P(*spec)
+        return P()
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+    return _with_sharding(cache_shapes, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# per-arch shape adjustments
+# ---------------------------------------------------------------------------
+
+
+def serving_config(cfg: ModelConfig, shape: ShapeConfig) -> Optional[ModelConfig]:
+    """Arch variant used for this input shape; None => skipped pair."""
+    if shape.name == "long_500k":
+        if cfg.name in LONG_CTX_SKIP:
+            return None
+        if cfg.family in ("ssm",):
+            return cfg                       # natively O(1) state
+        if cfg.attn_window:
+            return cfg                       # hybrid local attention
+        return cfg.replace(attn_window=LONG_CTX_WINDOW)   # SWA serving variant
+    return cfg
+
+
+def _batch_specs(cfg: ModelConfig, mesh, shapes: Dict[str, Tuple], dtypes) -> Dict:
+    """Shard the leading batch axis of every input over 'data' (+'pod')."""
+    caxes = mesh_lib.client_axes(mesh)
+    dspec = caxes if len(caxes) > 1 else "data"
+    out = {}
+    for k, shp in shapes.items():
+        nbatch = shp[0]
+        total = mesh_lib.axis_size(mesh, "data") * mesh_lib.axis_size(mesh, "pod")
+        spec = [dspec if _div(nbatch, total) else None] + [None] * (len(shp) - 1)
+        out[k] = _sds(shp, dtypes[k], mesh, P(*spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_entry(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     fl: Optional[FLConfig] = None, *,
+                     fused_decode: bool = False,
+                     ef_dtype=jnp.float32):
+    """fl_round over clients = pod*data. Returns (fn, args_pytree).
+
+    §Perf variants: ``fused_decode`` swaps the full-gradient client-axis
+    all-reduce for an all-gather of the tiny 3SFC payloads (fl/round.py);
+    ``ef_dtype`` stores the per-client EF residual in reduced precision.
+    """
+    num_clients = mesh_lib.num_clients_for(mesh)
+    caxes = mesh_lib.client_axes(mesh)
+    cspec = caxes if len(caxes) > 1 else "data"
+    per_client = max(1, shape.global_batch // num_clients)
+    fl = fl or FLConfig(num_clients=num_clients, local_steps=1, local_lr=0.01,
+                        compressor=CompressorConfig(kind="threesfc", syn_seq=16,
+                                                    soft_label_rank=8))
+    import dataclasses as _dc
+    fl = _dc.replace(fl, num_clients=num_clients)
+    model = build_model(cfg)
+    sspec = syn_spec_for(cfg, fl.compressor)
+    comp = make_compressor(fl.compressor, loss_fn=syn_loss_fn(model),
+                           syn_spec=sspec, local_lr=fl.local_lr)
+    # microbatching keeps per-step live activations ~1 sequence deep
+    num_micro = min(per_client, 8) if shape.seq_len >= 4096 else 1
+    while per_client % num_micro:
+        num_micro -= 1
+    round_fn = make_fl_round(model.loss, comp, fl, num_micro=num_micro,
+                             fused_decode=fused_decode,
+                             syn_loss_fn=syn_loss_fn(model), syn_spec=sspec)
+
+    K, B, S = fl.local_steps, per_client, shape.seq_len
+    pspecs = param_specs(model, mesh)
+    ef_shapes = jax.tree_util.tree_map(
+        lambda sd: jax.ShapeDtypeStruct((num_clients, *sd.shape), ef_dtype), pspecs)
+    ef_specs = _with_sharding(
+        ef_shapes, params_lib.sharding_specs(ef_shapes, mesh, client_axis=caxes),
+        mesh)
+    state = FLState(params=pspecs, ef=ef_specs,
+                    round=_sds((), jnp.int32, mesh, P()))
+
+    batch: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": _sds((num_clients, K, B, S), jnp.int32, mesh, P(cspec))}
+    if isinstance(model, EncDec):
+        batch["frames"] = _sds((num_clients, K, B, cfg.num_mm_tokens, cfg.d_model),
+                               jnp.bfloat16, mesh, P(cspec))
+    elif cfg.num_mm_tokens:
+        batch["prefix_embeds"] = _sds(
+            (num_clients, K, B, cfg.num_mm_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, P(cspec))
+    key = _sds((2,), jnp.uint32, mesh, P())
+
+    def entry(state, batch, key):
+        return round_fn(state, batch, key)
+
+    return entry, (state, batch, key)
+
+
+def make_prefill_entry(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    dsize = mesh_lib.axis_size(mesh, "data") * mesh_lib.axis_size(mesh, "pod")
+    caxes = mesh_lib.client_axes(mesh)
+    bspec = (caxes if len(caxes) > 1 else "data") if _div(B, dsize) else None
+    tokens = _sds((B, S), jnp.int32, mesh, P(bspec))
+    pspecs = param_specs(model, mesh)
+
+    if isinstance(model, EncDec):
+        frames = _sds((B, cfg.num_mm_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                      P(bspec))
+
+        def entry(params, frames, tokens):
+            return model.prefill(params, frames, tokens, cache_len=S)
+
+        return entry, (pspecs, frames, tokens)
+
+    if cfg.num_mm_tokens:
+        prefix = _sds((B, cfg.num_mm_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                      P(bspec))
+
+        def entry(params, prefix, tokens):
+            return model.prefill(params, tokens, cache_len=S, prefix_embeds=prefix)
+
+        return entry, (pspecs, prefix, tokens)
+
+    def entry(params, tokens):
+        return model.prefill(params, tokens, cache_len=S)
+
+    return entry, (pspecs, tokens)
+
+
+def make_decode_entry(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """One-token decode against a seq_len-deep cache."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    dsize = mesh_lib.axis_size(mesh, "data") * mesh_lib.axis_size(mesh, "pod")
+    caxes = mesh_lib.client_axes(mesh)
+    bspec = (caxes if len(caxes) > 1 else "data") if _div(B, dsize) else None
+    pspecs = param_specs(model, mesh)
+    if isinstance(model, EncDec):
+        cache_shapes = jax.eval_shape(
+            functools.partial(model.init_cache, B, S, cfg.num_mm_tokens))
+    else:
+        cache_shapes = jax.eval_shape(functools.partial(model.init_cache, B, S))
+    cspecs = cache_specs(cfg, cache_shapes, mesh)
+    # decode batch sharding: force the cache batch axis onto 'data' too
+    token = _sds((B,), jnp.int32, mesh, P(bspec))
+    t = _sds((), jnp.int32, mesh, P())
+
+    def entry(params, cache, token, t):
+        return model.decode_step(params, cache, token, t)
+
+    return entry, (pspecs, cspecs, token, t)
+
+
+def make_entry(arch: str, shape_name: str, mesh, fl: Optional[FLConfig] = None,
+               *, variant: Optional[Dict] = None):
+    """(entry_fn, args) for one (arch x input-shape) pair; None if skipped.
+
+    ``variant`` (§Perf knobs): {"fused_decode": bool, "ef_dtype": "bfloat16",
+    "param_dtype": "bfloat16", "act_shard": bool, "local_steps": int}.
+    """
+    variant = variant or {}
+    shape = INPUT_SHAPES[shape_name]
+    cfg = serving_config(get_config(arch), shape)
+    if cfg is None:
+        return None
+    if variant.get("param_dtype"):
+        cfg = cfg.replace(param_dtype=variant["param_dtype"])
+    if variant.get("act_shard"):
+        from repro.models import shard
+        shard.enable(True, mesh)
+    if variant.get("no_qk_hd_shard"):
+        params_lib.set_qk_hd_fallback(False)
+    if shape.mode == "train":
+        fl2 = fl
+        if variant.get("local_steps"):
+            import dataclasses as _dc
+            fl2 = _dc.replace(
+                fl or FLConfig(local_steps=1,
+                               compressor=CompressorConfig(
+                                   kind="threesfc", syn_seq=16,
+                                   soft_label_rank=8)),
+                local_steps=variant["local_steps"])
+        ef_dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+            variant.get("ef_dtype", "float32")]
+        return make_train_entry(cfg, shape, mesh, fl2,
+                                fused_decode=variant.get("fused_decode", False),
+                                ef_dtype=ef_dtype)
+    if shape.mode == "prefill":
+        return make_prefill_entry(cfg, shape, mesh)
+    return make_decode_entry(cfg, shape, mesh)

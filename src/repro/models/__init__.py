@@ -1,0 +1,8 @@
+"""Model substrate: every assigned architecture family, in pure JAX.
+
+Entry points:
+  * ``transformer.py``  — decoder-only LM (dense / MoE / SSM / hybrid blocks)
+  * ``encdec.py``       — encoder-decoder (seamless-m4t family)
+  * ``cnn.py``          — the paper's five small vision models
+  * ``build.py``        — ``build_model(cfg)`` returning a ``Model`` facade
+"""

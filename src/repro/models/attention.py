@@ -1,0 +1,183 @@
+"""GQA attention: full/sliding-window causal, cross-attention, ring-buffer
+KV-cache decode.
+
+Weight layout (chosen for tensor-parallel sharding, see params.py rules):
+  wq (d, H, hd)   wk/wv (d, KV, hd)   wo (H, hd, d)   [+ optional biases]
+
+Decode cache is a ring buffer of ``cache_len`` slots holding (k, v, abs_pos).
+``cache_len == seq_len`` gives exact full attention; ``cache_len == window``
+gives exact sliding-window attention with O(window) memory — that is the
+sub-quadratic serving mode used by long_500k.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P_
+from repro.models import shard
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, num_heads: int, num_kv: int, head_dim: int,
+              qkv_bias: bool = False, dtype=jnp.float32) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": P_.dense_init(kq, d, (d, num_heads, head_dim), dtype),
+        "wk": P_.dense_init(kk, d, (d, num_kv, head_dim), dtype),
+        "wv": P_.dense_init(kv, d, (d, num_kv, head_dim), dtype),
+        "wo": P_.dense_init(ko, num_heads * head_dim, (num_heads, head_dim, d), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((num_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((num_kv, head_dim), dtype)
+    return p
+
+
+def _project_qkv(p: Dict, x: jax.Array, xkv: Optional[jax.Array] = None):
+    dt = x.dtype
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("...sd,dhk->...shk", x, p["wq"].astype(dt))
+    k = jnp.einsum("...sd,dgk->...sgk", xkv, p["wk"].astype(dt))
+    v = jnp.einsum("...sd,dgk->...sgk", xkv, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    # §Perf: pin heads (fallback head_dim) to 'model' through the block
+    q = shard.heads(q) if q.shape[-2] % (shard._model_axis_size() or 1) == 0 \
+        else shard.heads(q, axis=-1)
+    k = shard.heads(k) if k.shape[-2] % (shard._model_axis_size() or 1) == 0 \
+        else shard.heads(k, axis=-1)
+    v = shard.heads(v) if v.shape[-2] % (shard._model_axis_size() or 1) == 0 \
+        else shard.heads(v, axis=-1)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array]):
+    """q (..,Sq,H,hd)  k/v (..,Sk,KV,hd) grouped attention, f32 softmax."""
+    H = q.shape[-2]
+    KV = k.shape[-2]
+    G = H // KV
+    Bsh = q.shape[:-3]
+    q = q.reshape(*Bsh, q.shape[-3], KV, G, q.shape[-1])
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("...qgrk,...sgk->...grqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("...grqs,...sgk->...qgrk", probs, v)
+    return out.reshape(*Bsh, out.shape[-4], H, out.shape[-1])
+
+
+def causal_mask(sq: int, sk: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(sq, sk) bool mask. ``offset`` = absolute position of query 0 minus
+    absolute position of key 0 (for chunked prefill)."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def attention(p: Dict, x: jax.Array, *, theta: float, window: int = 0,
+              positions: Optional[jax.Array] = None,
+              xkv: Optional[jax.Array] = None, causal: bool = True) -> jax.Array:
+    """Full-sequence attention. x: (B, S, d). Cross-attn: pass xkv, causal=False."""
+    S = x.shape[-2]
+    q, k, v = _project_qkv(p, x, xkv)
+    if positions is None:
+        positions = jnp.arange(S)
+    if xkv is None:  # self-attention: rope on both
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    mask = causal_mask(S, k.shape[-3], window) if causal else None
+    out = _sdpa(q, k, v, mask)
+    return jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, cache_len, KV, hd)
+    v: jax.Array          # (B, cache_len, KV, hd)
+    pos: jax.Array        # (B, cache_len) int32 absolute positions, -1 = empty
+
+
+def init_cache(batch: int, cache_len: int, num_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        v=jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        pos=-jnp.ones((batch, cache_len), jnp.int32),
+    )
+
+
+def prefill_cache(p: Dict, x: jax.Array, cache_len: int, *, theta: float,
+                  window: int = 0) -> Tuple[jax.Array, KVCache]:
+    """Run full self-attention over x and return output + populated cache.
+
+    When ``cache_len < S`` only the trailing window is kept (ring semantics).
+    """
+    B, S = x.shape[0], x.shape[-2]
+    q, k, v = _project_qkv(p, x)
+    positions = jnp.arange(S)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    eff_window = window if window > 0 else (0 if cache_len >= S else cache_len)
+    out = _sdpa(q, k, v, causal_mask(S, S, eff_window))
+    y = jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(x.dtype))
+    if cache_len >= S:
+        pad = cache_len - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pc = jnp.pad(positions, (0, pad), constant_values=-1)
+    else:
+        kc, vc, pc = k[:, -cache_len:], v[:, -cache_len:], positions[-cache_len:]
+        # ring layout: slot = pos % cache_len
+        slot = pc % cache_len
+        order = jnp.argsort(slot)
+        kc, vc, pc = kc[:, order], vc[:, order], pc[order]
+    pc = jnp.broadcast_to(pc, (B, cache_len)).astype(jnp.int32)
+    return y, KVCache(kc, vc, pc)
+
+
+def decode_attention(p: Dict, x_t: jax.Array, cache: KVCache, t: jax.Array, *,
+                     theta: float, window: int = 0) -> Tuple[jax.Array, KVCache]:
+    """One decode step. x_t: (B, d); t: scalar absolute position of the new
+    token. Returns (y_t (B, d), new cache)."""
+    dt_ = x_t.dtype
+    B = x_t.shape[0]
+    cache_len = cache.k.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x_t, p["wq"].astype(dt_))
+    k = jnp.einsum("bd,dgk->bgk", x_t, p["wk"].astype(dt_))
+    v = jnp.einsum("bd,dgk->bgk", x_t, p["wv"].astype(dt_))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt_), k + p["bk"].astype(dt_), v + p["bv"].astype(dt_)
+    tpos = jnp.asarray(t, jnp.int32)
+    q = apply_rope(q[:, None], tpos[None], theta)[:, 0]
+    k = apply_rope(k[:, None], tpos[None], theta)[:, 0]
+    slot = tpos % cache_len
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k[:, None].astype(cache.k.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v[:, None].astype(cache.v.dtype), slot, axis=1)
+    pc = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.full((B, 1), tpos, jnp.int32), slot, axis=1)
+    # grouped attention over the whole ring buffer, masked by validity/window
+    valid = (pc >= 0) & (pc <= tpos)
+    if window > 0:
+        valid = valid & (pc > tpos - window)
+    mask = valid[:, None, None, None, :]                       # (B,1,1,1,L)
+    out = _sdpa(q[:, None], kc, vc, mask)[:, 0]                # (B, H, hd)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(dt_))
+    return y, KVCache(kc, vc, pc)

@@ -1,0 +1,63 @@
+"""``build_model(cfg)`` + synthetic-feature spec helpers.
+
+The returned object is an ``LM``, ``EncDec`` or ``VisionModel`` facade; all
+expose ``init``, ``loss(params, batch)`` and a 3SFC-compatible
+``syn_loss(params, syn)`` (for EncDec the encoder length is bound here so the
+compressor sees the uniform ``LossFn`` signature).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import numpy as np
+
+from repro.configs.base import CompressorConfig, ModelConfig
+from repro.core.threesfc import SynSpec
+from repro.models.encdec import EncDec
+from repro.models.transformer import LM
+
+# encoder-side synthetic frames for enc-dec syn payloads
+ENC_SYN_LEN = 8
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.enc_layers > 0:
+        return EncDec(cfg)
+    return LM(cfg)
+
+
+def syn_spec_for(cfg: ModelConfig, comp: CompressorConfig) -> SynSpec:
+    """Shapes of the 3SFC payload for this architecture."""
+    n, L = comp.syn_batch, comp.syn_seq
+    if cfg.enc_layers > 0:
+        return SynSpec(
+            x_shape=(n, ENC_SYN_LEN + L, cfg.d_model),
+            num_classes=cfg.vocab_size,
+            label_rank=comp.soft_label_rank,
+            label_lead=(n, L),
+        )
+    return SynSpec(
+        x_shape=(n, L, cfg.d_model),
+        num_classes=cfg.vocab_size,
+        label_rank=comp.soft_label_rank,
+        label_lead=(n, L),
+    )
+
+
+def syn_loss_fn(model) -> Callable:
+    """Uniform ``loss_fn(params, syn)`` for the compressor."""
+    if isinstance(model, EncDec):
+        return functools.partial(
+            lambda m, p, s: m.syn_loss(p, s, ENC_SYN_LEN), model)
+    return model.syn_loss
+
+
+def vision_syn_spec(spec, comp: CompressorConfig) -> SynSpec:
+    """Classifier payload: raw synthetic pixels + soft labels (paper's form)."""
+    return SynSpec(
+        x_shape=(comp.syn_batch, *spec.input_shape),
+        num_classes=spec.num_classes,
+        label_rank=0,
+        label_lead=(comp.syn_batch,),
+    )

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based einsum dispatch.
+
+Dispatch is the GSPMD-friendly one-hot einsum formulation (MaxText/GShard
+style): dispatch (B,S,E,C) routes tokens to per-expert capacity slots, the
+expert SwiGLU runs as three (E, ...) batched matmuls (experts sharded over
+the 'model' mesh axis -> all-to-all appears in the lowered HLO exactly where
+a real expert-parallel deployment has it), and combine scatters weighted
+outputs back. Tokens beyond capacity are dropped (residual carries them).
+
+Optional shared experts (llama4-scout: 1, moonshot/moonlight: 2) run as an
+always-on dense SwiGLU added to the routed output.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P_
+from repro.models import layers, shard
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array       # load-balance loss (Switch-style)
+
+
+def moe_init(key, d: int, ff: int, num_experts: int, shared_experts: int = 0,
+             dtype=jnp.float32) -> Dict:
+    kr, ki, kg, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": P_.dense_init(kr, d, (d, num_experts), jnp.float32),
+        "w_in": P_.dense_init(ki, d, (num_experts, d, ff), dtype),
+        "w_gate": P_.dense_init(kg, d, (num_experts, d, ff), dtype),
+        "w_out": P_.dense_init(ko, ff, (num_experts, ff, d), dtype),
+    }
+    if shared_experts:
+        p["shared"] = layers.ffn_init(ks, d, ff * shared_experts, dtype)
+    return p
+
+
+def _router(p: Dict, x: jax.Array, k: int):
+    """Returns (topk weights (B,S,k), topk expert ids (B,S,k), aux loss)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / (jnp.sum(top_w, axis=-1, keepdims=True) + 1e-9)
+    # Switch aux loss: E * sum_e fraction_tokens(e) * mean_prob(e)
+    E = logits.shape[-1]
+    me = jnp.mean(probs, axis=(0, 1))                                # (E,)
+    onehot = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)     # top-1 assign
+    ce = jnp.mean(onehot, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return top_w, top_e, aux
+
+
+def moe_ffn(p: Dict, x: jax.Array, *, experts_per_token: int,
+            capacity_factor: float = 1.25, aux_coef: float = 0.01) -> MoEOut:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    k = experts_per_token
+    C = max(1, int(capacity_factor * k * S / E))
+    top_w, top_e, aux = _router(p, x, k)
+
+    # position of each token within its expert's queue, per routing slot
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)             # (B,S,k,E)
+    flat = onehot.reshape(B, S * k, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat) * flat              # (B,S*k,E)
+    keep = pos_in_e < C
+    cap_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = (flat * keep)[..., None] * cap_oh                      # (B,S*k,E,C)
+    weights = top_w.reshape(B, S * k)
+    combine = dispatch * weights[..., None, None]                     # (B,S*k,E,C)
+    # fold the k routing slots back onto tokens
+    dispatch = dispatch.reshape(B, S, k, E, C).sum(axis=2)
+    combine = combine.reshape(B, S, k, E, C).sum(axis=2)
+
+    dt = x.dtype
+    xe = jnp.einsum("bsd,bsec->ebcd", x, dispatch.astype(dt))        # (E,B,C,d)
+    xe = shard.heads(xe, axis=0)       # §Perf: experts stay on 'model'
+    h = jnp.einsum("ebcd,edf->ebcf", xe, p["w_in"].astype(dt))
+    g = jnp.einsum("ebcd,edf->ebcf", xe, p["w_gate"].astype(dt))
+    h = jax.nn.silu(g) * h
+    ye = jnp.einsum("ebcf,efd->ebcd", h, p["w_out"].astype(dt))      # (E,B,C,d)
+    y = jnp.einsum("ebcd,bsec->bsd", ye, combine.astype(dt))
+
+    if "shared" in p:
+        y = y + layers.ffn(p["shared"], x)
+    return MoEOut(y, aux_coef * aux)

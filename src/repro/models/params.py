@@ -1,0 +1,231 @@
+"""Parameter init / dtype / sharding-rule helpers.
+
+Params are nested dicts of jnp arrays. Layer stacks carry a leading
+``num_layers`` axis (populated with ``jax.vmap`` over the layer index) so the
+whole stack is one ``lax.scan`` — keeping the HLO small enough that 48-layer
+multi-billion-parameter configs lower on a single CPU host.
+
+Sharding is *path based*: ``sharding_rules`` maps a param path (joined dict
+keys) to a ``PartitionSpec`` via substring rules, applied with
+``tree_map_with_path``. Rules are mesh-shape aware: an axis is only sharded
+when its size divides by the mesh axis, otherwise the rule falls through to
+the next candidate (e.g. kv-heads -> head_dim -> replicate).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, shape: Tuple[int, ...], dtype=jnp.float32):
+    """Truncated-normal fan-in init (1/sqrt(in_dim))."""
+    scale = 1.0 / np.sqrt(max(in_dim, 1))
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def stack_init(init_fn: Callable[[jax.Array], PyTree], key, n: int) -> PyTree:
+    """vmap ``init_fn`` over ``n`` layer keys -> stacked params (leading n)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# path utilities
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# Each rule: (regex, spec_fn(leaf_shape, mesh_axis_sizes) -> PartitionSpec).
+Rule = Tuple[str, Callable[[Tuple[int, ...], Dict[str, int]], P]]
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+# §Perf H2 toggle (see _heads_then_hd): default keeps the baseline behavior
+_QK_HD_FALLBACK = True
+
+
+def set_qk_hd_fallback(value: bool) -> None:
+    global _QK_HD_FALLBACK
+    _QK_HD_FALLBACK = value
+
+
+def make_sharding_rules(model_axis: str = "model") -> Sequence[Rule]:
+    """Default tensor-parallel rules for the LM families.
+
+    Conventions (see layer defs): weights are stored so that the sharded
+    logical axis is recognizable by name; ``stacked`` leading layer axis is
+    never sharded.
+    """
+    m = model_axis
+
+    def _shard_last(shape, sizes):
+        return P(*([None] * (len(shape) - 1) + [m])) if _div(shape[-1], sizes[m]) else P()
+
+    def _shard_dim(i):
+        def f(shape, sizes):
+            j = i if i >= 0 else len(shape) + i
+            if 0 <= j < len(shape) and _div(shape[j], sizes[m]):
+                spec = [None] * len(shape)
+                spec[j] = m
+                return P(*spec)
+            return P()
+        return f
+
+    def _heads_then_hd(shape, sizes):
+        # (..., H, hd): prefer heads, fall back to head_dim, else replicate.
+        # head_dim fallback is a FOOTGUN for q/k: hd is the QK^T contraction
+        # dim, so sharding it makes GSPMD all-reduce the (S, S) logits —
+        # 320 GiB/layer for llama4 prefill_32k (§Perf H2). Disable via
+        # set_qk_hd_fallback(False) to replicate q/k instead.
+        if len(shape) >= 2 and _div(shape[-2], sizes[m]):
+            return P(*([None] * (len(shape) - 2) + [m, None]))
+        if _QK_HD_FALLBACK and _div(shape[-1], sizes[m]):
+            return P(*([None] * (len(shape) - 1) + [m]))
+        return P()
+
+    def _embed_table(shape, sizes):
+        # (V, d): shard the vocab rows.
+        return P(m, None) if len(shape) == 2 and _div(shape[0], sizes[m]) else P()
+
+    def _wo(shape, sizes):
+        # (H, hd, d): shard heads; fall back to head_dim.
+        if _div(shape[0], sizes[m]):
+            return P(*([m] + [None] * (len(shape) - 1)))
+        if len(shape) > 2 and _div(shape[1], sizes[m]):
+            return P(*([None, m] + [None] * (len(shape) - 2)))
+        return P()
+
+    return [
+        # embeddings / logits: shard vocab (dim 0 for embed table, last for head)
+        (r"embed/table$", _embed_table),
+        (r"lm_head/w$", _shard_last),
+        # attention
+        (r"attn/wq$", _heads_then_hd),       # (d, H, hd)
+        (r"attn/wk$", _heads_then_hd),       # (d, KV, hd)
+        (r"attn/wv$", _heads_then_hd),
+        (r"attn/wo$", _wo),                  # (H, hd, d): shard H, fallback hd
+        (r"attn/bq$", _heads_then_hd),
+        (r"attn/bk$", _heads_then_hd),
+        (r"attn/bv$", _heads_then_hd),
+        # FFN
+        (r"ffn/w_in$", _shard_last),          # (d, ff)
+        (r"ffn/w_gate$", _shard_last),
+        (r"ffn/w_out$", _shard_dim(-2)),      # (ff, d)
+        # MoE: shard experts; if E doesn't divide the model axis (e.g. 16
+        # experts on a 64-way axis after a mesh reshape), shard the per-
+        # expert ffn dim instead so expert weights never replicate
+        (r"moe/(w_in|w_gate)$", lambda s, z: (
+            _shard_dim(0)(s, z) if _div(s[0], z[m]) else _shard_dim(2)(s, z))),
+        (r"moe/w_out$", lambda s, z: (
+            _shard_dim(0)(s, z) if _div(s[0], z[m]) else _shard_dim(1)(s, z))),
+        (r"moe/router$", lambda s, z: P()),
+        # SSM (mamba2): shard the inner/heads axis
+        (r"ssm/in_proj$", _shard_last),       # (d, inner_total)
+        (r"ssm/out_proj$", _shard_dim(-2)),   # (inner, d)
+        (r"ssm/(A_log|D|dt_bias)$", lambda s, z: P(m) if _div(s[-1], z[m]) else P()),
+        (r"ssm/conv_w$", _shard_last),        # (width, conv_dim)
+        (r"ssm/conv_b$", _shard_last),
+        (r"ssm/norm$", _shard_last),
+        # RG-LRU: recurrent width sharded over model
+        (r"rglru/(w_in|w_gate_lin|w_gate_in|w_gate_a)$", _shard_last),
+        (r"rglru/(a_param|b_gate_in|b_gate_a)$", _shard_last),
+        (r"rglru/w_y$", _shard_dim(-2)),
+        (r"rglru/conv_w$", _shard_last),
+        (r"rglru/conv_b$", _shard_last),
+        # norms & everything else: replicate
+        (r".*", lambda s, z: P()),
+    ]
+
+
+def sharding_specs(
+    params: PyTree,
+    mesh: jax.sharding.Mesh,
+    rules: Optional[Sequence[Rule]] = None,
+    stacked_paths: Tuple[str, ...] = ("layers/", "blocks/", "enc_layers/", "dec_layers/"),
+    client_axis: Optional[Tuple[str, ...]] = None,
+) -> PyTree:
+    """PartitionSpec pytree for ``params`` on ``mesh``.
+
+    * stacked layer params get their leading layer axis unsharded (specs are
+      shifted right by one None).
+    * ``client_axis``: if given (e.g. ``('pod','data')``), every leaf gets an
+      extra *leading* client axis sharded over those mesh axes (FL client
+      stacking).
+    """
+    rules = rules or make_sharding_rules()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if "model" not in sizes:
+        sizes["model"] = 1
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = any(s in ps for s in stacked_paths)
+        core_shape = shape
+        n_lead = 0
+        if client_axis:
+            core_shape = core_shape[1:]
+            n_lead += 1
+        if stacked:
+            core_shape = core_shape[1:]
+            n_lead += 1
+        for pat, fn in rules:
+            if re.search(pat, ps):
+                core = fn(core_shape, sizes)
+                break
+        else:
+            core = P()
+        lead = []
+        if client_axis:
+            lead.append(client_axis)
+        if stacked:
+            lead.append(None)
+        full = list(lead) + list(core)
+        # pad to rank
+        while len(full) < len(shape):
+            full.append(None)
+        return P(*full[: len(shape)])
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), params)

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = a^(c·r_t)   with a = sigmoid(a_param), c = 8
+    h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+The block wraps the LRU in the Griffin recurrent-block layout:
+linear-in -> temporal conv(width 4) -> RG-LRU -> gated linear-out.
+Full-sequence form uses an associative scan over time (log-depth —
+the TPU-friendly formulation); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P_
+from repro.models import layers
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    conv_buf: jax.Array     # (B, width-1, W)
+    h: jax.Array            # (B, W)
+
+
+def rglru_init(key, d: int, width: int, conv_width: int = 4, dtype=jnp.float32) -> Dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # a_param init so that a = sigmoid(a_param)^c spans ~[0.9, 0.999]
+    a0 = jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, width) ** (1.0 / _C)
+                           / (1 - jnp.linspace(0.9, 0.999, width) ** (1.0 / _C))))
+    return {
+        "w_in": P_.dense_init(k1, d, (d, width), dtype),        # branch input
+        "w_gate_lin": P_.dense_init(k2, d, (d, width), dtype),  # multiplicative gate branch
+        **layers.causal_conv1d_init(k3, width, conv_width, dtype),
+        "w_gate_in": P_.dense_init(k4, width, (width, width), dtype),
+        "b_gate_in": jnp.zeros((width,), dtype),
+        "w_gate_a": P_.dense_init(k5, width, (width, width), dtype),
+        "b_gate_a": jnp.zeros((width,), dtype),
+        "a_param": a0.astype(jnp.float32),
+        "w_y": P_.dense_init(k6, width, (width, d), dtype),
+    }
+
+
+def _lru_coeffs(p: Dict, x: jax.Array):
+    """x: (..., W) conv output. Returns (a, gx) both f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_gate_a"].astype(jnp.float32) + p["b_gate_a"])
+    i = jax.nn.sigmoid(xf @ p["w_gate_in"].astype(jnp.float32) + p["b_gate_in"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["a_param"])            # log a_t
+    a = jnp.exp(log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * xf)
+    return a, gx
+
+
+def rglru_forward(p: Dict, u: jax.Array, h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """u: (B, S, d) -> (y (B, S, d), final hidden (B, W))."""
+    x = jnp.einsum("...d,dw->...w", u, p["w_in"].astype(u.dtype))
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", u, p["w_gate_lin"].astype(u.dtype)))
+    x = layers.causal_conv1d(p, x)
+    a, gx = _lru_coeffs(p, x)                                    # (B,S,W) f32
+    if h0 is not None:
+        gx = gx.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+    # associative scan: (a1,b1) ∘ (a2,b2) = (a1·a2, b2 + a2·b1)
+    def comb(l, r):
+        return (l[0] * r[0], r[1] + r[0] * l[1])
+    _, h = jax.lax.associative_scan(comb, (a, gx), axis=1)
+    y = (h.astype(u.dtype) * gate)
+    return jnp.einsum("...w,wd->...d", y, p["w_y"].astype(u.dtype)), h[:, -1, :]
+
+
+def init_rglru_cache(batch: int, width: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16) -> RGLRUCache:
+    return RGLRUCache(
+        conv_buf=jnp.zeros((batch, conv_width - 1, width), dtype),
+        h=jnp.zeros((batch, width), jnp.float32),
+    )
+
+
+def rglru_decode_step(p: Dict, u_t: jax.Array, cache: RGLRUCache) -> Tuple[jax.Array, RGLRUCache]:
+    """u_t: (B, d)."""
+    x = jnp.einsum("bd,dw->bw", u_t, p["w_in"].astype(u_t.dtype))
+    gate = jax.nn.gelu(jnp.einsum("bd,dw->bw", u_t, p["w_gate_lin"].astype(u_t.dtype)))
+    x, conv_buf = layers.causal_conv1d_step(p, x, cache.conv_buf)
+    a, gx = _lru_coeffs(p, x)
+    h = a * cache.h + gx
+    y = h.astype(u_t.dtype) * gate
+    out = jnp.einsum("bw,wd->bd", y, p["w_y"].astype(u_t.dtype))
+    return out, RGLRUCache(conv_buf, h)

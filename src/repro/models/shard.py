@@ -1,0 +1,63 @@
+"""Opt-in activation sharding constraints (§Perf lever).
+
+Baseline lowering relies purely on GSPMD propagation from parameter/input
+shardings; the SPMD partitioner then emits "involuntary full
+rematerialization" copies around attention (kv-head-sharded tensors flowing
+into batch-sharded consumers). ``enable(True, mesh)`` turns on explicit
+``with_sharding_constraint`` pins (NamedSharding on the concrete mesh) at
+the attention/MoE hot spots so the partitioner keeps the head axis on
+'model' through the block.
+
+Constraints are applied only when (a) enabled, (b) the registered mesh has a
+'model' axis, and (c) the constrained dim divides the axis — so the same
+model code lowers unchanged in tests and single-device runs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ENABLED = False
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def enable(value: bool = True, mesh: Optional[jax.sharding.Mesh] = None) -> None:
+    global _ENABLED, _MESH
+    _ENABLED = value
+    if mesh is not None:
+        _MESH = mesh
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def _model_axis_size() -> Optional[int]:
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return None
+    return dict(zip(_MESH.axis_names, _MESH.devices.shape))["model"]
+
+
+def heads(x: jax.Array, axis: int = -2) -> jax.Array:
+    """Pin the heads axis of (..., H, hd)-shaped activations to 'model'."""
+    if not _ENABLED or _MESH is None:
+        return x
+    msize = _model_axis_size()
+    ax = axis % x.ndim
+    if not msize or x.shape[ax] % msize:
+        return x
+    spec = [None] * x.ndim
+    spec[ax] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_MESH, P(*spec)))
+    except Exception:
+        return x
+
+
+def last(x: jax.Array) -> jax.Array:
+    """Pin the last (feature) axis to 'model' (MoE expert-parallel h)."""
+    return heads(x, axis=-1)

@@ -1,0 +1,205 @@
+"""Mamba2 mixer — SSD (state-space duality) with chunked scan.
+
+The chunked formulation splits the sequence into chunks of length Q:
+intra-chunk terms are dense matmuls (MXU work — this is the part the
+``ssd_chunk`` Pallas kernel targets), the inter-chunk recurrence is a short
+``lax.scan`` over Nc = S/Q chunk states. Decode is the O(1) recurrent update
+h' = exp(dt·A)·h + dt·(B ⊗ x).
+
+Layer layout (n_groups = 1):
+  in_proj (d, 2·d_inner + 2·N + H)  -> z, x, B, C, dt
+  conv    depthwise causal width-4 over concat(x, B, C)
+  A_log, dt_bias, D : (H,)
+  norm    gated RMSNorm (d_inner,)
+  out_proj (d_inner, d)
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P_
+from repro.models import layers
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    heads: int
+    head_dim: int
+    state: int
+    conv_width: int
+    chunk: int
+    use_pallas: bool = False
+
+    @classmethod
+    def from_cfg(cls, cfg):
+        d_inner = cfg.ssm_expand * cfg.d_model
+        heads = d_inner // cfg.ssm_head_dim
+        return cls(cfg.d_model, d_inner, heads, cfg.ssm_head_dim,
+                   cfg.ssm_state, cfg.conv_width, cfg.ssm_chunk,
+                   getattr(cfg, "use_pallas_ssd", False))
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.state
+
+    @property
+    def in_proj_dim(self):
+        return 2 * self.d_inner + 2 * self.state + self.heads
+
+
+def ssm_init(key, dims: SSMDims, dtype=jnp.float32) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": P_.dense_init(k1, dims.d_model, (dims.d_model, dims.in_proj_dim), dtype),
+        **layers.causal_conv1d_init(k2, dims.conv_dim, dims.conv_width, dtype),
+        "A_log": jnp.zeros((dims.heads,), jnp.float32),
+        "dt_bias": jnp.zeros((dims.heads,), jnp.float32),
+        "D": jnp.ones((dims.heads,), jnp.float32),
+        "norm": jnp.ones((dims.d_inner,), dtype),
+        "out_proj": P_.dense_init(k4, dims.d_inner, (dims.d_inner, dims.d_model), dtype),
+    }
+
+
+def _split_proj(p: Dict, u: jax.Array, dims: SSMDims):
+    zx = jnp.einsum("...d,de->...e", u, p["in_proj"].astype(u.dtype))
+    z, x, Bc, Cc, dt = jnp.split(
+        zx, [dims.d_inner, 2 * dims.d_inner,
+             2 * dims.d_inner + dims.state,
+             2 * dims.d_inner + 2 * dims.state], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _gated_norm(p: Dict, y: jax.Array, z: jax.Array, eps: float = 1e-6) -> jax.Array:
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) * p["norm"].astype(jnp.float32)).astype(y.dtype)
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q) lower-triangular pairwise cumulative sums."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    # element (i, j): sum_{j < m <= i} x_m  for i >= j; diag = 0
+    d = cs[..., :, None] - cs[..., None, :]
+    return jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), d, -jnp.inf)
+
+
+def ssd_scan(xdt: jax.Array, dA: jax.Array, Bc: jax.Array, Cc: jax.Array,
+             chunk: int, h0: jax.Array = None):
+    """Chunked SSD. xdt (b,s,h,p) = dt·x;  dA (b,s,h);  B,C (b,s,n).
+
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, pdim = xdt.shape
+    n = Bc.shape[-1]
+    Q = min(chunk, s)
+    pad = (-s) % Q
+    if pad:
+        # zero-pad the tail: xdt=0 contributes nothing and dA=0 -> decay 1,
+        # so y[:s] and the final state are exact
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // Q
+    xc = xdt.reshape(b, nc, Q, h, pdim)
+    dAc = dA.reshape(b, nc, Q, h)
+    Bq = Bc.reshape(b, nc, Q, n)
+    Cq = Cc.reshape(b, nc, Q, n)
+
+    dA_cs = jnp.cumsum(dAc, axis=2)                                   # (b,c,Q,h)
+    L = jnp.exp(segsum(jnp.moveaxis(dAc, -1, -2)))                    # (b,c,h,Q,Q)
+    # intra-chunk (the ssd_chunk kernel computes this fused on TPU)
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", Cq, Bq, L.astype(xdt.dtype), xc)
+    # per-chunk input -> end-of-chunk state
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)               # (b,c,Q,h)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", Bq,
+                        decay_states.astype(xdt.dtype), xc)           # (b,c,h,p,n)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                          # (b,c,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, pdim, n), xdt.dtype)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = st + dec[..., None, None].astype(st.dtype) * carry
+        return new, carry                                              # emit state *entering* the chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)                              # (c,b,h,p,n)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                          # (c,b,h)
+    final, prev_states = jax.lax.scan(step, h0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                      # (b,c,h,p,n)
+    # contribution of the incoming state to each position
+    state_decay = jnp.exp(dA_cs)                                       # (b,c,Q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cq, prev_states,
+                       state_decay.astype(xdt.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    if pad:
+        y = y[:, :s_orig]
+    return y, final
+
+
+class SSMCache(NamedTuple):
+    conv_buf: jax.Array     # (B, width-1, conv_dim)
+    state: jax.Array        # (B, H, P, N)
+
+
+def init_ssm_cache(batch: int, dims: SSMDims, dtype=jnp.bfloat16) -> SSMCache:
+    return SSMCache(
+        conv_buf=jnp.zeros((batch, dims.conv_width - 1, dims.conv_dim), dtype),
+        state=jnp.zeros((batch, dims.heads, dims.head_dim, dims.state), dtype),
+    )
+
+
+def ssm_forward(p: Dict, u: jax.Array, dims: SSMDims,
+                h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence mixer. u: (B, S, d) -> (y (B, S, d), final_state)."""
+    z, x, Bc, Cc, dt = _split_proj(p, u, dims)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(layers.causal_conv1d(p, xbc))
+    x, Bc, Cc = jnp.split(xbc, [dims.d_inner, dims.d_inner + dims.state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                           # (H,)
+    xh = x.reshape(*x.shape[:-1], dims.heads, dims.head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    dA = dt * A
+    if dims.use_pallas and xdt.shape[1] % min(dims.chunk, xdt.shape[1]) == 0:
+        from repro.kernels import ops as kops
+        if h0 is None:
+            h0 = jnp.zeros((xdt.shape[0], dims.heads, dims.head_dim,
+                            dims.state), xdt.dtype)
+        y, final = kops.ssd_chunked_ad(xdt, dA, Bc, Cc, dims.chunk, h0)
+    else:
+        y, final = ssd_scan(xdt, dA, Bc, Cc, dims.chunk, h0)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(*u.shape[:-1], dims.d_inner)
+    y = _gated_norm(p, y, z)
+    return jnp.einsum("...e,ed->...d", y, p["out_proj"].astype(u.dtype)), final
+
+
+def ssm_decode_step(p: Dict, u_t: jax.Array, cache: SSMCache,
+                    dims: SSMDims) -> Tuple[jax.Array, SSMCache]:
+    """One-token recurrent update. u_t: (B, d)."""
+    z, x, Bc, Cc, dt = _split_proj(p, u_t, dims)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
+    xbc, conv_buf = layers.causal_conv1d_step(p, xbc, cache.conv_buf)
+    xbc = jax.nn.silu(xbc)
+    x, Bc, Cc = jnp.split(xbc, [dims.d_inner, dims.d_inner + dims.state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                               # (B,H)
+    xh = x.reshape(x.shape[0], dims.heads, dims.head_dim)
+    dBx = jnp.einsum("bn,bhp->bhpn", Bc, xh * dt[..., None].astype(xh.dtype))
+    state = cache.state * dA[..., None, None].astype(cache.state.dtype) + dBx.astype(cache.state.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cc.astype(state.dtype))
+    y = y + p["D"].astype(y.dtype)[:, None] * xh.astype(y.dtype)
+    y = y.reshape(u_t.shape[0], dims.d_inner).astype(u_t.dtype)
+    y = _gated_norm(p, y, z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(u_t.dtype))
+    return out, SSMCache(conv_buf, state)

@@ -1,0 +1,402 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid families.
+
+Layers are grouped into *periods* = one repetition of ``cfg.block_pattern``
+(uniform archs: pattern ("attn",) -> period == layer). Period params carry a
+leading ``n_periods`` axis and the whole stack is ONE ``lax.scan`` (remat'd),
+so even 48-layer multi-billion-param configs lower to a compact HLO. A
+non-divisible remainder becomes unrolled ``tail`` blocks (recurrentgemma:
+26 = 3*8 + 2).
+
+Big-vocab discipline: the (B, S, V) logits tensor is never materialized.
+Training CE scans the sequence in chunks (remat'd), projecting each chunk's
+hidden states and accumulating the loss; prefill projects only the last
+position; decode projects a single token.
+
+Multimodal (vlm / audio stubs): ``prefix_embeds`` (B, T_mm, d) are
+concatenated in front of the token embeddings; the loss masks them out.
+
+Synthetic features (3SFC): ``syn_loss`` consumes soft input embeddings
+(n, L, d) + soft labels (dense or low-rank over the vocab) — the model-
+agnostic payload the paper transmits, generalized to the LM families.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.threesfc import SynData, soft_xent
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod, rglru as rglru_mod, ssm as ssm_mod
+from repro.models import params as P_
+
+PyTree = Any
+LOSS_CHUNK = 512          # sequence-chunked CE block size
+
+
+# ---------------------------------------------------------------------------
+# pattern helpers
+# ---------------------------------------------------------------------------
+
+
+def pattern_layout(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(pattern, n_periods, tail_pattern)."""
+    pat = tuple(cfg.block_pattern)
+    n_periods = cfg.num_layers // len(pat)
+    tail = pat[: cfg.num_layers % len(pat)]
+    return pat, n_periods, tail
+
+
+# ---------------------------------------------------------------------------
+# block init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, btype: str, dtype) -> Dict:
+    d = cfg.d_model
+    if btype == "attn":
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": layers.rmsnorm_init(d, dtype),
+            "attn": attn_mod.attn_init(k1, d, cfg.num_heads, cfg.num_kv_heads,
+                                       cfg.resolved_head_dim, cfg.qkv_bias, dtype),
+            "ln2": layers.rmsnorm_init(d, dtype),
+        }
+        if cfg.num_experts:
+            p["moe"] = moe_mod.moe_init(k2, d, cfg.d_ff, cfg.num_experts,
+                                        cfg.shared_experts, dtype)
+        else:
+            p["ffn"] = layers.ffn_init(k2, d, cfg.d_ff, dtype)
+        return p
+    if btype == "ssm":
+        dims = ssm_mod.SSMDims.from_cfg(cfg)
+        return {"ln1": layers.rmsnorm_init(d, dtype),
+                "ssm": ssm_mod.ssm_init(key, dims, dtype)}
+    if btype == "rec":
+        k1, k2 = jax.random.split(key)
+        width = cfg.rnn_width or cfg.d_model
+        return {
+            "ln1": layers.rmsnorm_init(d, dtype),
+            "rglru": rglru_mod.rglru_init(k1, d, width, cfg.conv_width, dtype),
+            "ln2": layers.rmsnorm_init(d, dtype),
+            "ffn": layers.ffn_init(k2, d, cfg.d_ff, dtype),
+        }
+    raise ValueError(f"unknown block type {btype!r}")
+
+
+def _block_forward(cfg: ModelConfig, btype: str, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if btype == "attn":
+        h = attn_mod.attention(p["attn"], layers.rmsnorm(p["ln1"], x, eps),
+                               theta=cfg.rope_theta, window=cfg.attn_window)
+        x = x + h
+        z = layers.rmsnorm(p["ln2"], x, eps)
+        if cfg.num_experts:
+            out = moe_mod.moe_ffn(p["moe"], z, experts_per_token=cfg.experts_per_token,
+                                  capacity_factor=cfg.capacity_factor,
+                                  aux_coef=cfg.moe_aux_coef)
+            x = x + out.y
+            aux = aux + out.aux_loss
+        else:
+            x = x + layers.ffn(p["ffn"], z)
+    elif btype == "ssm":
+        dims = ssm_mod.SSMDims.from_cfg(cfg)
+        y, _ = ssm_mod.ssm_forward(p["ssm"], layers.rmsnorm(p["ln1"], x, eps), dims)
+        x = x + y
+    elif btype == "rec":
+        y, _ = rglru_mod.rglru_forward(p["rglru"], layers.rmsnorm(p["ln1"], x, eps))
+        x = x + y
+        x = x + layers.ffn(p["ffn"], layers.rmsnorm(p["ln2"], x, eps))
+    return x, aux
+
+
+def _block_cache(cfg: ModelConfig, btype: str, batch: int, cache_len: int, dtype):
+    if btype == "attn":
+        eff = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        return attn_mod.init_cache(batch, eff, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, dtype)
+    if btype == "ssm":
+        return ssm_mod.init_ssm_cache(batch, ssm_mod.SSMDims.from_cfg(cfg), dtype)
+    if btype == "rec":
+        width = cfg.rnn_width or cfg.d_model
+        return rglru_mod.init_rglru_cache(batch, width, cfg.conv_width, dtype)
+    raise ValueError(btype)
+
+
+def _block_prefill(cfg: ModelConfig, btype: str, p: Dict, x: jax.Array, cache_len: int):
+    """Full forward + populated cache for this block."""
+    eps = cfg.norm_eps
+    if btype == "attn":
+        eff = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        h, kv = attn_mod.prefill_cache(p["attn"], layers.rmsnorm(p["ln1"], x, eps),
+                                       eff, theta=cfg.rope_theta, window=cfg.attn_window)
+        x = x + h
+        z = layers.rmsnorm(p["ln2"], x, eps)
+        if cfg.num_experts:
+            out = moe_mod.moe_ffn(p["moe"], z, experts_per_token=cfg.experts_per_token,
+                                  capacity_factor=cfg.capacity_factor,
+                                  aux_coef=cfg.moe_aux_coef)
+            x = x + out.y
+        else:
+            x = x + layers.ffn(p["ffn"], z)
+        return x, kv
+    if btype == "ssm":
+        dims = ssm_mod.SSMDims.from_cfg(cfg)
+        xin = layers.rmsnorm(p["ln1"], x, eps)
+        y, final = ssm_mod.ssm_forward(p["ssm"], xin, dims)
+        # conv buffer = last (width-1) conv inputs
+        z_, xc, Bc, Cc, _ = ssm_mod._split_proj(p["ssm"], xin[:, -(dims.conv_width - 1):, :], dims)
+        buf = jnp.concatenate([xc, Bc, Cc], axis=-1).astype(final.dtype)
+        return x + y, ssm_mod.SSMCache(buf, final)
+    if btype == "rec":
+        width = cfg.rnn_width or cfg.d_model
+        xin = layers.rmsnorm(p["ln1"], x, eps)
+        y, hfin = rglru_mod.rglru_forward(p["rglru"], xin)
+        xconv = jnp.einsum("...d,dw->...w", xin[:, -(cfg.conv_width - 1):, :],
+                           p["rglru"]["w_in"].astype(x.dtype))
+        x = x + y
+        x = x + layers.ffn(p["ffn"], layers.rmsnorm(p["ln2"], x, eps))
+        return x, rglru_mod.RGLRUCache(xconv, hfin)
+    raise ValueError(btype)
+
+
+def _block_decode(cfg: ModelConfig, btype: str, p: Dict, x_t: jax.Array, cache, t):
+    eps = cfg.norm_eps
+    if btype == "attn":
+        h, cache = attn_mod.decode_attention(
+            p["attn"], layers.rmsnorm(p["ln1"], x_t, eps), cache, t,
+            theta=cfg.rope_theta, window=cfg.attn_window)
+        x_t = x_t + h
+        z = layers.rmsnorm(p["ln2"], x_t, eps)
+        if cfg.num_experts:
+            out = moe_mod.moe_ffn(p["moe"], z[:, None, :],
+                                  experts_per_token=cfg.experts_per_token,
+                                  capacity_factor=cfg.capacity_factor,
+                                  aux_coef=cfg.moe_aux_coef)
+            x_t = x_t + out.y[:, 0, :]
+        else:
+            x_t = x_t + layers.ffn(p["ffn"], z)
+        return x_t, cache
+    if btype == "ssm":
+        dims = ssm_mod.SSMDims.from_cfg(cfg)
+        y, cache = ssm_mod.ssm_decode_step(p["ssm"], layers.rmsnorm(p["ln1"], x_t, eps),
+                                           cache, dims)
+        return x_t + y, cache
+    if btype == "rec":
+        y, cache = rglru_mod.rglru_decode_step(p["rglru"], layers.rmsnorm(p["ln1"], x_t, eps),
+                                               cache)
+        x_t = x_t + y
+        x_t = x_t + layers.ffn(p["ffn"], layers.rmsnorm(p["ln2"], x_t, eps))
+        return x_t, cache
+    raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    """Functional decoder-only LM facade bound to a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern, self.n_periods, self.tail = pattern_layout(cfg)
+        self.param_dtype = P_.dtype_of(cfg.param_dtype)
+        self.dtype = P_.dtype_of(cfg.dtype)
+
+    # ---- init -------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        ke, kl, kt, kh = jax.random.split(key, 4)
+
+        def period_init(k):
+            ks = jax.random.split(k, len(self.pattern))
+            return {str(i): _block_init(ks[i], cfg, bt, self.param_dtype)
+                    for i, bt in enumerate(self.pattern)}
+
+        params = {
+            "embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model, self.param_dtype),
+            "layers": P_.stack_init(period_init, kl, self.n_periods),
+            "final_norm": layers.rmsnorm_init(cfg.d_model, self.param_dtype),
+        }
+        if self.tail:
+            kts = jax.random.split(kt, len(self.tail))
+            params["tail"] = {str(i): _block_init(kts[i], cfg, bt, self.param_dtype)
+                              for i, bt in enumerate(self.tail)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.lm_head_init(kh, cfg.d_model, cfg.vocab_size,
+                                                    self.param_dtype)
+        return params
+
+    # ---- shared trunk -----------------------------------------------------
+
+    def _trunk(self, params: PyTree, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(B, S, d) -> (hidden (B, S, d), aux). One scan over periods."""
+        cfg = self.cfg
+
+        def period_fn(carry, pp):
+            x, aux = carry
+            for i, bt in enumerate(self.pattern):
+                x, a = _block_forward(cfg, bt, pp[str(i)], x)
+                aux = aux + a
+            return (x, aux), None
+
+        fn = jax.checkpoint(period_fn) if cfg.remat else period_fn
+        (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        for i, bt in enumerate(self.tail):
+            x, a = _block_forward(cfg, bt, params["tail"][str(i)], x)
+            aux = aux + a
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def _logits(self, params: PyTree, h: jax.Array) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return layers.unembed(params["embed"], h)
+        return layers.lm_head(params["lm_head"], h)
+
+    def embed_tokens(self, params: PyTree, tokens: jax.Array) -> jax.Array:
+        return layers.embed(params["embed"], tokens, self.dtype)
+
+    # ---- training ---------------------------------------------------------
+
+    def forward_hidden(self, params: PyTree, tokens: jax.Array,
+                       prefix_embeds: Optional[jax.Array] = None):
+        x = self.embed_tokens(params, tokens)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        return self._trunk(params, x)
+
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Next-token CE, sequence-chunked so (B,S,V) never materializes.
+
+        batch: tokens (B,S) int32, optional prefix_embeds (B,T,d),
+        optional mask (B,S) f32.
+        """
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h, aux = self.forward_hidden(params, tokens, batch.get("prefix_embeds"))
+        T = h.shape[1] - S
+        h = h[:, T:, :]                                   # token positions only
+        targets = tokens[:, 1:]
+        mask = batch.get("mask")
+        mask = jnp.ones_like(targets, jnp.float32) if mask is None else mask[:, 1:]
+        hs = h[:, :-1, :]
+        chunk = min(LOSS_CHUNK, S - 1)
+        n_chunks = (S - 1) // chunk
+        rem = (S - 1) % chunk
+
+        def ce(hc, tc, mc):
+            logits = self._logits(params, hc)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+            return jnp.sum(nll * mc), jnp.sum(mc)
+
+        ce = jax.checkpoint(ce)
+        if n_chunks > 0:
+            hcs = hs[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, -1)
+            tcs = targets[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+            mcs = mask[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+
+            def body(acc, xs):
+                hc, tc, mc = xs
+                s, c = ce(hc, tc, mc)
+                return (acc[0] + s, acc[1] + c), None
+
+            (tot, cnt), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                (jnp.moveaxis(hcs, 1, 0), jnp.moveaxis(tcs, 1, 0), jnp.moveaxis(mcs, 1, 0)))
+        else:
+            tot = cnt = jnp.zeros((), jnp.float32)
+        if rem:
+            s, c = ce(hs[:, n_chunks * chunk:], targets[:, n_chunks * chunk:],
+                      mask[:, n_chunks * chunk:])
+            tot, cnt = tot + s, cnt + c
+        return tot / jnp.maximum(cnt, 1.0) + aux
+
+    # ---- synthetic features (3SFC payload) ---------------------------------
+
+    def syn_loss(self, params: PyTree, syn: SynData) -> jax.Array:
+        """Soft-embedding inputs -> soft-label CE (the compressor's F)."""
+        h, aux = self._trunk(params, syn.x.astype(self.dtype))
+        logits = self._logits(params, h)
+        return soft_xent(logits, syn.labels()) + aux
+
+    # ---- serving ----------------------------------------------------------
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16) -> PyTree:
+        cfg = self.cfg
+
+        def one_period():
+            return {str(i): _block_cache(cfg, bt, batch, cache_len, dtype)
+                    for i, bt in enumerate(self.pattern)}
+
+        period = one_period()
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (self.n_periods, *x.shape)), period)
+        cache = {"layers": stacked}
+        if self.tail:
+            cache["tail"] = {str(i): _block_cache(cfg, bt, batch, cache_len, dtype)
+                             for i, bt in enumerate(self.tail)}
+        return cache
+
+    def prefill(self, params: PyTree, tokens: jax.Array, cache_len: int,
+                prefix_embeds: Optional[jax.Array] = None):
+        """Returns (last-token logits (B, V), cache, t0)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+        def period_fn(x, pp):
+            caches = {}
+            for i, bt in enumerate(self.pattern):
+                x, c = _block_prefill(cfg, bt, pp[str(i)], x, cache_len)
+                caches[str(i)] = c
+            return x, caches
+
+        fn = jax.checkpoint(period_fn) if cfg.remat else period_fn
+        x, stacked = jax.lax.scan(fn, x, params["layers"])
+        cache = {"layers": stacked}
+        if self.tail:
+            cache["tail"] = {}
+            for i, bt in enumerate(self.tail):
+                x, c = _block_prefill(cfg, bt, params["tail"][str(i)], x, cache_len)
+                cache["tail"][str(i)] = c
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x[:, -1, :])
+        return logits, cache, jnp.asarray(x.shape[1], jnp.int32)
+
+    def decode_step(self, params: PyTree, cache: PyTree, token: jax.Array, t):
+        """token (B,) int32, t scalar position. Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        x_t = layers.embed(params["embed"], token, self.dtype)
+
+        def period_fn(carry, xs):
+            x_t, t = carry
+            pp, pc = xs
+            new_c = {}
+            for i, bt in enumerate(self.pattern):
+                x_t, c = _block_decode(cfg, bt, pp[str(i)], x_t, pc[str(i)], t)
+                new_c[str(i)] = c
+            return (x_t, t), new_c
+
+        (x_t, _), new_stacked = jax.lax.scan(
+            period_fn, (x_t, jnp.asarray(t, jnp.int32)),
+            (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_stacked}
+        if self.tail:
+            new_cache["tail"] = {}
+            for i, bt in enumerate(self.tail):
+                x_t, c = _block_decode(cfg, bt, params["tail"][str(i)], x_t,
+                                       cache["tail"][str(i)], t)
+                new_cache["tail"][str(i)] = c
+        x_t = layers.rmsnorm(params["final_norm"], x_t, cfg.norm_eps)
+        return self._logits(params, x_t), new_cache

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import OptState, adam, make_optimizer, momentum, sgd

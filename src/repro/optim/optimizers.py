@@ -1,0 +1,80 @@
+"""Minimal functional optimizers (optax-free).
+
+``make_optimizer(name, lr, **kw)`` returns ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    params, state = update_fn(params, grads, state)
+All math is done in f32 and cast back to the param dtype (mixed-precision
+friendly: bf16 params keep an f32 view only transiently).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree           # first moment (zeros tree for sgd)
+    nu: PyTree           # second moment (zeros tree unless adam)
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float):
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), (), ())
+
+    def update(params, grads, state):
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, OptState(state.step + 1, (), ())
+
+    return init, update
+
+
+def momentum(lr: float, beta: float = 0.9):
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), ())
+
+    def update(params, grads, state):
+        mu = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state.mu, grads)
+        new = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu)
+        return new, OptState(state.step + 1, mu, ())
+
+    return init, update
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(params, grads, state):
+        t = state.step + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m, v: (p.astype(jnp.float32)
+                             - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)).astype(p.dtype),
+            params, mu, nu)
+        return new, OptState(t, mu, nu)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Tuple[Callable, Callable]:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](lr, **kw)

@@ -1,0 +1,254 @@
+"""Trip-count-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified empirically — a length-10 scan reports 1/10th of the
+unrolled FLOPs), which silently undercounts every scanned layer stack /
+local-step loop by its trip count. XLA *does* annotate
+``backend_config={"known_trip_count":{"n":...}}`` on while ops after loop
+analysis, so this module re-derives the three roofline inputs from the
+optimized HLO text with loop multipliers applied:
+
+  * flops       — 2·prod(result_dims)·prod(contracting_dims) per dot
+                  (+ rough conv accounting), × enclosing trip counts
+  * hbm bytes   — per instruction: operand + result bytes, skipping
+                  register-level ops and fusion *internals* (a fusion's own
+                  operands/result are the real HBM traffic), × trip counts
+  * collectives — operand bytes per kind, × trip counts
+
+This is a cost MODEL, not a simulator: it assumes every loop iteration
+re-touches its operands (true for scanned layer stacks, where weights stream
+from HBM each layer). Parsed totals are validated against cost_analysis()
+on loop-free programs in tests.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)")
+_CALLED = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)="
+                     r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(type_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_text: str
+    op: str
+    line: str
+    called: List[str]
+    trip: int = 1
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)    # %name -> type text
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += mult * other.coll_bytes[k]
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "opt-barrier", "partition-id",
+    "replica-id", "iota", "while", "conditional", "call",
+}
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        # strip /*index=N*/-style comments: their '=' breaks the type regexes
+        line = _COMMENT_RE.sub("", raw).strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line) and not line.startswith("%param"):
+            m = _COMP_HDR.match(line[:-1].strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_text, op = m.group(1), m.group(2), m.group(3)
+        called = []
+        for g1, g2 in _CALLED.findall(line):
+            if g1:
+                called += [c.strip().lstrip("%") for c in g1.split(",")]
+            elif g2:
+                called.append(g2)
+        ins = Instr(name, type_text, op, line, called)
+        if op == "while":
+            t = _TRIP.search(line)
+            ins.trip = int(t.group(1)) if t else 1
+        cur.instrs.append(ins)
+        cur.types[name] = type_text
+    return comps, entry
+
+
+def _operand_names(line: str, op: str) -> List[str]:
+    idx = line.find(op + "(")
+    if idx < 0:
+        return []
+    depth = 0
+    start = idx + len(op)
+    end = start
+    for j in range(start, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    return re.findall(r"%([\w.\-]+)", line[start + 1:end])
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    result_elems = 0
+    for _, dims in _shapes_in(ins.type_text):
+        n = 1
+        for d in dims:
+            n *= d
+        result_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    ops = _operand_names(ins.line, ins.op)
+    contract = 1
+    if m and ops:
+        lhs_type = comp.types.get(ops[0], "")
+        shp = _shapes_in(lhs_type)
+        if shp:
+            dims = shp[0][1]
+            for i in (int(x) for x in m.group(1).split(",") if x):
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    result_elems = 0
+    for _, dims in _shapes_in(ins.type_text):
+        n = 1
+        for d in dims:
+            n *= d
+        result_elems += n
+    ops = _operand_names(ins.line, ins.op)
+    kernel_elems = 1
+    if len(ops) >= 2:
+        shp = _shapes_in(comp.types.get(ops[1], ""))
+        if shp:
+            for d in shp[0][1]:
+                kernel_elems *= d
+            out_feat = shp[0][1][-1] if shp[0][1] else 1
+            kernel_elems = kernel_elems // max(out_feat, 1)
+    return 2.0 * result_elems * kernel_elems
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> float:
+    if ins.op in _SKIP_BYTES_OPS:
+        return 0.0
+    total = _bytes_of(ins.type_text)
+    for name in _operand_names(ins.line, ins.op):
+        total += _bytes_of(comp.types.get(name, ""))
+    return float(total)
+
+
+def _comp_cost(comps: Dict[str, Computation], name: str,
+               memo: Dict[str, CostTotals], fused: bool = False) -> CostTotals:
+    key = name + ("#f" if fused else "")
+    if key in memo:
+        return memo[key]
+    memo[key] = CostTotals()          # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return memo[key]
+    tot = CostTotals()
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            tot.flops += _dot_flops(ins, comp)
+        elif ins.op == "convolution":
+            tot.flops += _conv_flops(ins, comp)
+        base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+        if base in _COLLECTIVES and not ins.op.endswith("-done"):
+            b = sum(_bytes_of(comp.types.get(n, ""))
+                    for n in _operand_names(ins.line, ins.op))
+            tot.coll_bytes[base] += float(b)
+        if not fused:
+            tot.bytes += _instr_bytes(ins, comp)
+        if ins.op == "fusion":
+            for c in ins.called:
+                tot.add(_comp_cost(comps, c, memo, fused=True))
+        elif ins.op in ("while", "conditional", "call", "map", "reduce",
+                        "reduce-window", "scatter", "sort", "all-reduce",
+                        "reduce-scatter", "select-and-scatter", "custom-call"):
+            for c in ins.called:
+                tot.add(_comp_cost(comps, c, memo, fused=fused), mult=ins.trip)
+    memo[key] = tot
+    return tot
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    """Trip-count-aware totals for the per-device module."""
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return CostTotals()
+    return _comp_cost(comps, entry, {})

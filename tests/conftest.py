@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests must see 1 CPU device (the 512-device flag is dryrun-only)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/

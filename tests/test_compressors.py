@@ -1,0 +1,72 @@
+"""Baseline compressors: reconstruction semantics + budget accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 50))
+def test_topk_keeps_largest(seed, k):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (200,))
+    payload, recon = baselines.topk_compress(v, k)
+    kept = np.nonzero(np.asarray(recon))[0]
+    assert len(kept) <= k
+    # every kept magnitude >= every dropped magnitude
+    dropped = np.setdiff1d(np.arange(200), kept)
+    if len(kept) and len(dropped):
+        assert np.abs(np.asarray(v))[kept].min() >= np.abs(np.asarray(v))[dropped].max() - 1e-6
+    # kept values are exact
+    np.testing.assert_allclose(np.asarray(recon)[kept], np.asarray(v)[kept])
+    assert payload.floats == 2.0 * k
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_signsgd_recon(seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (333,))
+    payload, recon = baselines.signsgd_compress(v)
+    scale = jnp.mean(jnp.abs(v))
+    np.testing.assert_allclose(recon, scale * jnp.sign(v), rtol=1e-6)
+    assert payload.floats == 333 / 32.0 + 1.0
+
+
+def test_stc_ternary():
+    v = jax.random.normal(jax.random.PRNGKey(0), (500,))
+    payload, recon = baselines.stc_compress(v, 50)
+    vals = np.asarray(recon)[np.nonzero(np.asarray(recon))[0]]
+    assert len(np.unique(np.abs(vals))) == 1          # single magnitude
+    assert payload.floats == 50 + 50 / 32.0 + 1.0
+
+
+def test_randk_unbiased_support():
+    v = jnp.arange(1.0, 101.0)
+    key = jax.random.PRNGKey(1)
+    _, recon = baselines.randk_compress(key, v, 10)
+    nz = np.nonzero(np.asarray(recon))[0]
+    assert len(nz) == 10
+    np.testing.assert_allclose(np.asarray(recon)[nz], np.asarray(v)[nz])
+
+
+def test_compression_rate_eq1():
+    # paper Eq. 1 on the MLP numbers: 795 floats / 199,210 params = 1/250.6
+    assert abs(baselines.compression_rate(795.0, 199210) - 795.0 / 199210) < 1e-12
+
+
+def test_tree_compressor_interface():
+    from repro.configs.base import CompressorConfig
+    from repro.core.compressor import make_compressor
+
+    params = {"a": jnp.zeros((64, 8)), "b": jnp.zeros((100,))}
+    g = jax.tree.map(lambda p: jax.random.normal(jax.random.PRNGKey(0), p.shape), params)
+    for kind in ("identity", "topk", "randk", "signsgd", "stc"):
+        comp = make_compressor(CompressorConfig(kind=kind, keep_ratio=0.1))
+        e = comp.init_state(params)
+        recon, e2, m = comp.step(jax.random.PRNGKey(1), g, e, params)
+        assert jax.tree_util.tree_structure(recon) == jax.tree_util.tree_structure(params)
+        assert np.isfinite(float(m.cosine))
+        if kind == "identity":
+            np.testing.assert_allclose(float(m.cosine), 1.0, rtol=1e-6)

@@ -1,0 +1,71 @@
+"""Config registry: all 10 assigned archs resolve with the exact assigned
+hyperparameters; smoke variants respect the reduction contract."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, get_smoke_config
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment table
+ASSIGNED = {
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source, "every config cites its source"
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert q.num_experts == 128 and q.experts_per_token == 8
+    m = get_config("moonshot-v1-16b-a3b")
+    assert m.num_experts == 64 and m.experts_per_token == 6
+    l = get_config("llama4-scout-17b-a16e")
+    assert l.num_experts == 16 and l.experts_per_token == 1
+
+
+def test_family_specifics():
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("mamba2-370m").block_pattern == ("ssm",)
+    assert get_config("recurrentgemma-2b").block_pattern == ("rec", "rec", "attn")
+    assert get_config("seamless-m4t-medium").enc_layers == 12
+    assert get_config("qwen1.5-0.5b").qkv_bias
+    assert get_config("internvl2-1b").qkv_bias
+    assert get_config("internvl2-1b").modality == "vision"
+    assert get_config("seamless-m4t-medium").modality == "audio"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduction_contract(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 5
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,61 @@
+"""Flattener round-trip + tree algebra (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flat
+
+
+def _tree(key, shapes):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s) for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+SHAPES = [(3,), (2, 4), (5, 1, 2)]
+
+
+def test_flatten_roundtrip():
+    t = _tree(jax.random.PRNGKey(0), SHAPES)
+    fl = flat.Flattener(t)
+    v = fl.flatten(t)
+    assert v.shape == (sum(int(np.prod(s)) for s in SHAPES),)
+    t2 = fl.unflatten(v)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), t, t2)
+
+
+def test_flatten_jit_safe():
+    t = _tree(jax.random.PRNGKey(0), SHAPES)
+    fl = flat.Flattener(t)
+
+    @jax.jit
+    def f(t):
+        return fl.unflatten(fl.flatten(t) * 2.0)
+
+    t2 = f(t)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(2 * a, b, rtol=1e-6), t, t2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(-3, 3, allow_nan=False))
+def test_tree_algebra_matches_flat(seed, alpha):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = _tree(k1, SHAPES)
+    b = _tree(k2, SHAPES)
+    fl = flat.Flattener(a)
+    va, vb = fl.flatten(a), fl.flatten(b)
+    np.testing.assert_allclose(flat.tree_dot(a, b), jnp.vdot(va, vb),
+                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(flat.tree_norm(a), jnp.linalg.norm(va), rtol=1e-5)
+    got = fl.flatten(flat.tree_axpy(alpha, a, b))
+    np.testing.assert_allclose(got, alpha * va + vb, rtol=1e-5, atol=1e-6)
+    cos = flat.tree_cosine(a, b)
+    want = jnp.vdot(va, vb) / (jnp.linalg.norm(va) * jnp.linalg.norm(vb))
+    np.testing.assert_allclose(cos, want, rtol=1e-4, atol=1e-6)
+
+
+def test_tree_cosine_self_is_one():
+    a = _tree(jax.random.PRNGKey(3), SHAPES)
+    np.testing.assert_allclose(flat.tree_cosine(a, a), 1.0, rtol=1e-5)

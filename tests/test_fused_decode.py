@@ -1,0 +1,80 @@
+"""Fused server decode (§Perf beyond-paper optimization) must be EXACT:
+
+    G(ĝ_1..ĝ_N) = ∇_w (1/N) Σ_i s_i F(D_syn,i, w^t)
+
+so the fused round produces the same new global model and the same EF
+residuals as the per-client-decode round, while never materializing a
+full-gradient collective.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CompressorConfig, FLConfig
+from repro.core.compressor import make_compressor
+from repro.data.synthetic import make_class_image_dataset
+from repro.fl.round import fl_init, make_fl_round
+from repro.models.build import vision_syn_spec
+from repro.models.cnn import MNIST_SPEC, make_paper_model
+
+N, K, B = 3, 2, 16
+
+
+def test_fused_decode_matches_per_client_decode():
+    model = make_paper_model("mlp", MNIST_SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = make_class_image_dataset(jax.random.PRNGKey(1), 400, (28, 28, 1), 10)
+    rng = np.random.default_rng(0)
+    bx = np.stack([ds.x[rng.choice(400, (K, B))] for _ in range(N)])
+    by = np.stack([ds.y[rng.choice(400, (K, B))] for _ in range(N)])
+    batches = {"x": jnp.asarray(bx), "y": jnp.asarray(by)}
+
+    ccfg = CompressorConfig(kind="threesfc", syn_steps=3, syn_lr=0.1)
+    spec = vision_syn_spec(MNIST_SPEC, ccfg)
+    comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                           local_lr=0.05)
+    fl_cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                      compressor=ccfg)
+
+    base_round = make_fl_round(model.loss, comp, fl_cfg)
+    fused_round = make_fl_round(model.loss, comp, fl_cfg, fused_decode=True,
+                                syn_loss_fn=model.syn_loss, syn_spec=spec)
+
+    key = jax.random.PRNGKey(2)
+    s0 = fl_init(params, N)
+    s1, m1 = base_round(s0, batches, key)
+    s2, m2 = fused_round(s0, batches, key)
+
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                         atol=1e-6),
+                 s1.params, s2.params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                         atol=1e-5),
+                 s1.ef, s2.ef)
+    np.testing.assert_allclose(np.asarray(m1.cosine), np.asarray(m2.cosine),
+                               rtol=1e-4)
+
+
+def test_fused_round_trains():
+    model = make_paper_model("mlp", MNIST_SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = make_class_image_dataset(jax.random.PRNGKey(1), 400, (28, 28, 1), 10)
+    ccfg = CompressorConfig(kind="threesfc", syn_steps=5, syn_lr=0.1)
+    spec = vision_syn_spec(MNIST_SPEC, ccfg)
+    comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec)
+    fl_cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                      compressor=ccfg)
+    rf = jax.jit(make_fl_round(model.loss, comp, fl_cfg, fused_decode=True,
+                               syn_loss_fn=model.syn_loss, syn_spec=spec))
+    state = fl_init(params, N)
+    rng = np.random.default_rng(1)
+    losses = []
+    key = jax.random.PRNGKey(3)
+    for r in range(6):
+        bx = np.stack([ds.x[rng.choice(400, (K, B))] for _ in range(N)])
+        by = np.stack([ds.y[rng.choice(400, (K, B))] for _ in range(N)])
+        key, kr = jax.random.split(key)
+        state, m = rf(state, {"x": jnp.asarray(bx), "y": jnp.asarray(by)}, kr)
+        losses.append(float(m.loss))
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,118 @@
+"""3SFC core properties: Eq. 8 optimality, Eq. 10 decode exactness,
+encoder progress, EF interaction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import CompressorConfig
+from repro.core import flat, threesfc
+from repro.core.compressor import make_compressor
+from repro.data.synthetic import make_class_image_dataset
+from repro.models.build import vision_syn_spec
+from repro.models.cnn import MNIST_SPEC, make_paper_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = make_paper_model("mlp", MNIST_SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = make_class_image_dataset(jax.random.PRNGKey(1), 256, (28, 28, 1), 10)
+    p = params
+    for i in range(3):
+        g = jax.grad(model.loss)(p, {"x": jnp.asarray(ds.x[i*64:(i+1)*64]),
+                                     "y": jnp.asarray(ds.y[i*64:(i+1)*64])})
+        p = jax.tree.map(lambda a, b: a - 0.01 * b, p, g)
+    target = flat.tree_sub(params, p)
+    spec = vision_syn_spec(MNIST_SPEC, CompressorConfig(syn_batch=1))
+    return model, params, target, spec
+
+
+def test_scale_is_least_squares_optimal(setup):
+    """Eq. 8: s* minimizes ||s·∇F - target||²; any other s is worse."""
+    model, params, target, spec = setup
+    syn0 = threesfc.init_syn(jax.random.PRNGKey(2), spec)
+    res = threesfc.encode(model.syn_loss, params, target, syn0, steps=3, lr=0.1)
+    gw = jax.grad(model.syn_loss)(params, res.syn)
+
+    def err(s):
+        return float(flat.tree_sqnorm(flat.tree_sub(flat.tree_scale(gw, s), target)))
+
+    s_star = float(res.s)
+    e_star = err(s_star)
+    for ds in (-0.5, -0.1, 0.1, 0.5):
+        assert err(s_star * (1 + ds) + 1e-3 * ds) >= e_star - 1e-10
+
+
+def test_decode_matches_encoder_recon(setup):
+    """Eq. 10: the server's decode from (D_syn, s) reproduces the client's
+    reconstruction exactly (both sides evaluate at the same w^t)."""
+    model, params, target, spec = setup
+    syn0 = threesfc.init_syn(jax.random.PRNGKey(3), spec)
+    res = threesfc.encode(model.syn_loss, params, target, syn0, steps=2, lr=0.1)
+    server_recon = threesfc.decode(model.syn_loss, params, res.syn, res.s)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7),
+                 res.recon, server_recon)
+
+
+def test_encoder_steps_improve_cosine(setup):
+    model, params, target, spec = setup
+    syn0 = threesfc.init_syn(jax.random.PRNGKey(4), spec)
+    cs = []
+    for steps in (1, 5, 15):
+        res = threesfc.encode(model.syn_loss, params, target, syn0,
+                              steps=steps, lr=0.1)
+        cs.append(abs(float(res.cosine)))
+    assert cs[-1] > cs[0], f"cosine did not improve with steps: {cs}"
+
+
+def test_recon_is_colinear_with_syn_grad(setup):
+    """recon = s·∇F lies on the syn-grad ray -> |cos(recon, ∇F)| == 1."""
+    model, params, target, spec = setup
+    syn0 = threesfc.init_syn(jax.random.PRNGKey(5), spec)
+    res = threesfc.encode(model.syn_loss, params, target, syn0, steps=1, lr=0.1)
+    gw = jax.grad(model.syn_loss)(params, res.syn)
+    assert abs(abs(float(flat.tree_cosine(res.recon, gw))) - 1.0) < 1e-5
+
+
+def test_budget_accounting(setup):
+    """||D_syn||_0 + 1 <= B (paper Eq. 7 constraint), exact float count."""
+    model, params, target, spec = setup
+    syn = threesfc.init_syn(jax.random.PRNGKey(6), spec)
+    assert syn.floats == spec.floats == 28 * 28 * 1 + 10
+    # MLP budget: 795 floats -> the paper's 250.6x ratio on 199,210 params
+    d = flat.tree_size(params)
+    assert d == 199210
+    assert abs((spec.floats + 1) / d - 1 / 250.57) < 1e-4
+
+
+def test_low_rank_labels():
+    spec = threesfc.SynSpec(x_shape=(1, 8, 32), num_classes=1000,
+                            label_rank=4, label_lead=(1, 8))
+    syn = threesfc.init_syn(jax.random.PRNGKey(0), spec)
+    assert syn.y.shape == (1, 8, 4) and syn.y_rank.shape == (4, 1000)
+    assert syn.labels().shape == (1, 8, 1000)
+    assert spec.floats == 1 * 8 * 32 + 1 * 8 * 4 + 4 * 1000
+
+
+def test_threesfc_with_ef_reduces_error(setup):
+    """EF residual shrinks the *effective* error over rounds (C3 mechanism):
+    cumulative reconstruction tracks cumulative target."""
+    model, params, target, spec = setup
+    comp_cfg = CompressorConfig(kind="threesfc", syn_steps=5, syn_lr=0.1)
+    comp = make_compressor(comp_cfg, loss_fn=model.syn_loss, syn_spec=spec)
+    e = comp.init_state(params)
+    tot_recon = jax.tree.map(jnp.zeros_like, e)
+    key = jax.random.PRNGKey(7)
+    rel_errs = []
+    for t in range(4):
+        key, kr = jax.random.split(key)
+        recon, e, m = comp.step(kr, target, e, params)
+        tot_recon = flat.tree_add(tot_recon, recon)
+        want = flat.tree_scale(target, float(t + 1))
+        rel = float(flat.tree_norm(flat.tree_sub(tot_recon, want))
+                    / flat.tree_norm(want))
+        rel_errs.append(rel)
+    # the telescoped relative error must not grow (EF keeps it = |e_T|/|sum g|)
+    assert rel_errs[-1] <= rel_errs[0] + 1e-6, rel_errs
