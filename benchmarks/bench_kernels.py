@@ -1,12 +1,24 @@
 """Kernel-level benchmark: HBM-pass accounting for the fused Pallas kernels.
 
 No wall-clock on CPU — the structural metric is bytes-accessed from
-``cost_analysis`` of the lowered fused vs unfused encoder reductions
-(fused_cosine's contract: ONE pass over 2d floats instead of three).
-Also validates every kernel against its ref.py oracle across a shape sweep.
+``cost_analysis`` of the lowered fused vs unfused reductions, at two levels:
+
+* vector level: ``fused_cosine``'s contract (ONE pass over 2d floats for
+  the (x·y, ||x||², ||y||²) triple instead of three separate reductions);
+* encoder level: the 3SFC objective-evaluation hot path. The seed encoder
+  ran ~8 O(d) reduction sweeps plus a materialized s·∇F tree per
+  evaluation; the fused ``tree_stats`` path reads each gradient tree
+  exactly once (≤ 2d·4 bytes + tolerance) and derives Eq. 8's scale,
+  Eq. 9's value and the efficiency cosine as scalar algebra on the triple.
+
+Also validates ``ops.fused_cosine`` / ``ops.tree_fused_stats`` against
+their oracles across ragged shape sweeps, and emits ``BENCH_kernels.json``
+(fused vs unfused bytes + pass counts) so the perf trajectory is tracked
+round over round by ``benchmarks/run.py``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 from typing import Dict
@@ -15,7 +27,57 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flat
 from repro.kernels import ops, ref
+
+# ragged, non-tile-aligned leaves — sums to d below
+TREE_SHAPES = [(300, 1000), (1025,), (7,), (), (64, 1024), (123, 45)]
+
+
+def _tree_pair(key):
+    ks = jax.random.split(key, 2 * len(TREE_SHAPES))
+    a = {f"p{i}": jax.random.normal(ks[2 * i], s)
+         for i, s in enumerate(TREE_SHAPES)}
+    b = {f"p{i}": jax.random.normal(ks[2 * i + 1], s)
+         for i, s in enumerate(TREE_SHAPES)}
+    return a, b
+
+
+def _bytes(fn, *args) -> float:
+    cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return float(cost.get("bytes accessed", 0.0))
+
+
+def _seed_encoder_reductions(gw, t):
+    """The seed encode's post-scan reduction sequence (structural baseline):
+    tree_cosine(gw,t) inside the objective, Eq. 8's dot + sqnorm, a
+    materialized recon tree, and a second tree_cosine(recon, t)."""
+    def dot(x, y):
+        return sum(jnp.sum(xi * yi) for xi, yi in
+                   zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+    def sq(x):
+        return sum(jnp.sum(jnp.square(xi)) for xi in jax.tree.leaves(x))
+
+    obj_cos = dot(gw, t) / (jnp.sqrt(sq(gw)) * jnp.sqrt(sq(t)) + 1e-12)
+    num = dot(t, gw)
+    den = sq(gw) + 1e-12
+    s = num / den
+    recon = jax.tree.map(lambda x: s * x, gw)
+    cos = dot(recon, t) / (jnp.sqrt(sq(recon)) * jnp.sqrt(sq(t)) + 1e-12)
+    return s, cos, 1.0 - jnp.abs(obj_cos)
+
+
+def _fused_encoder_reductions(gw, t):
+    """The rewritten path: ONE stats triple per objective evaluation
+    (structural stand-in for the Pallas kernel: same reads, same math)."""
+    st = flat._tree_stats_naive(gw, t)
+    d, gg, tt = st[0], st[1], st[2]
+    s = d / (gg + 1e-12)
+    cos = jnp.sign(s) * d / (jnp.sqrt(gg) * jnp.sqrt(tt) + 1e-12)
+    return s, cos, 1.0 - jnp.abs(d / (jnp.sqrt(gg) * jnp.sqrt(tt) + 1e-12))
 
 
 def run(quick: bool = True, out_dir: str = "experiments/results") -> Dict:
@@ -26,25 +88,62 @@ def run(quick: bool = True, out_dir: str = "experiments/results") -> Dict:
     def unfused(x, y):
         return jnp.stack([jnp.vdot(x, y), jnp.vdot(x, x), jnp.vdot(y, y)])
 
-    cost_u = jax.jit(unfused).lower(x, y).compile().cost_analysis()
-    if isinstance(cost_u, list):
-        cost_u = cost_u[0]
-    # fused: a single pass over both vectors
-    cost_f = jax.jit(ref.fused_cosine).lower(x, y).compile().cost_analysis()
-    if isinstance(cost_f, list):
-        cost_f = cost_f[0]
-
     ideal = 2 * n * 4          # one read of x + one read of y
     results = {
         "n": n,
         "ideal_bytes": ideal,
-        "unfused_bytes": cost_u.get("bytes accessed", 0.0),
-        "fused_oracle_bytes": cost_f.get("bytes accessed", 0.0),
+        "unfused_bytes": _bytes(unfused, x, y),
+        "fused_oracle_bytes": _bytes(ref.fused_cosine, x, y),
     }
-    print("\n== Kernel pass accounting (fused_cosine) ==")
+    print("\n== Kernel pass accounting (fused_cosine, flat vectors) ==")
     print(f"  ideal single-pass bytes : {ideal:,}")
     print(f"  unfused (3x vdot)       : {results['unfused_bytes']:,.0f}")
     print(f"  fused oracle            : {results['fused_oracle_bytes']:,.0f}")
+
+    # ---- encoder hot path: bytes per 3SFC objective evaluation ------------
+    # Two accountings, both recorded:
+    #  * cost_analysis of the lowered jnp stand-ins — what XLA charges on
+    #    THIS backend (CPU charges every unfused elementwise intermediate,
+    #    so both numbers are inflated; the ratio is still structural);
+    #  * the Pallas block-spec contract — the kernel's grid DMAs exactly two
+    #    (block, 1024) tiles per step, so its TPU HBM traffic is *static*
+    #    (ops.tree_stats_hbm_bytes). That is the single-pass gate.
+    gw, t = _tree_pair(jax.random.PRNGKey(2))
+    d_tree = sum(l.size for l in jax.tree.leaves(gw))
+    tree_ideal = 2 * d_tree * 4
+    seed_bytes = _bytes(_seed_encoder_reductions, gw, t)
+    fused_xla_bytes = _bytes(_fused_encoder_reductions, gw, t)
+    kernel_bytes = ops.tree_stats_hbm_bytes(gw)
+    # tolerance: tail zero padding (<8 rows/chunk by the block plan) + acc
+    tol = 0.02 * tree_ideal + 2 * 8 * 1024 * 4
+    results.update({
+        "tree_d": d_tree,
+        "tree_ideal_bytes": tree_ideal,
+        "encoder_seed_bytes": seed_bytes,
+        "encoder_fused_xla_bytes": fused_xla_bytes,
+        "encoder_fused_kernel_bytes": kernel_bytes,
+        "encoder_seed_passes": seed_bytes / (d_tree * 4),
+        "encoder_fused_xla_passes": fused_xla_bytes / (d_tree * 4),
+        "encoder_fused_kernel_passes": kernel_bytes / (d_tree * 4),
+        "encoder_fused_single_pass": bool(kernel_bytes <= tree_ideal + tol),
+        "encoder_bytes_ratio": seed_bytes / max(kernel_bytes, 1.0),
+        "encoder_xla_bytes_ratio": seed_bytes / max(fused_xla_bytes, 1.0),
+    })
+    print("\n== Encoder stats path (per objective evaluation, tree of "
+          f"d={d_tree:,}) ==")
+    print(f"  ideal (read gw + read t): {tree_ideal:,}")
+    print(f"  seed reductions + recon : {seed_bytes:,.0f} "
+          f"({results['encoder_seed_passes']:.1f} passes, cost_analysis)")
+    print(f"  fused stand-in (XLA)    : {fused_xla_bytes:,.0f} "
+          f"({results['encoder_fused_xla_passes']:.1f} passes, cost_analysis; "
+          f"{results['encoder_xla_bytes_ratio']:.1f}x less than seed)")
+    print(f"  fused kernel contract   : {kernel_bytes:,.0f} "
+          f"({results['encoder_fused_kernel_passes']:.2f} passes, BlockSpec "
+          f"accounting)")
+    print(f"  [{'PASS' if results['encoder_fused_single_pass'] else 'FAIL'}] "
+          f"fused stats path <= one read of each tree (+padding tolerance); "
+          f"{results['encoder_bytes_ratio']:.1f}x fewer bytes than the seed "
+          f"encoder reductions")
 
     # correctness sweep (also covered in tests/)
     checks = []
@@ -54,14 +153,30 @@ def run(quick: bool = True, out_dir: str = "experiments/results") -> Dict:
         got = ops.fused_cosine(xs, ys)
         want = ref.fused_cosine(xs, ys)
         checks.append(bool(np.allclose(got, want, rtol=2e-4)))
+    st_got = ops.tree_fused_stats(gw, t)
+    st_want = flat._tree_stats_naive(gw, t)
+    checks.append(bool(np.allclose(st_got, st_want, rtol=2e-4)))
     results["allclose"] = all(checks)
     print(f"  [{'PASS' if results['allclose'] else 'FAIL'}] "
-          f"pallas(interpret) == oracle across sizes")
+          f"pallas(interpret) == oracle across sizes (vector + tree)")
+
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "kernels.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    # trajectory artifact tracked from this PR onward (see ROADMAP) —
+    # anchored to the repo root so any launch cwd updates the same file
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(repo_root, "BENCH_kernels.json"), "w") as f:
         json.dump(results, f, indent=2)
     return results
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    ap = argparse.ArgumentParser()
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--quick", dest="quick", action="store_true", default=True,
+                   help="small sizes, CPU-friendly (default)")
+    g.add_argument("--full", dest="quick", action="store_false",
+                   help="paper-scale sizes")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CompressorConfig
-from repro.core import flat, threesfc
+from repro.core import baselines, flat, threesfc
 from repro.data.synthetic import make_class_image_dataset
 from repro.models.build import vision_syn_spec
 from repro.models.cnn import MNIST_SPEC, accuracy, make_paper_model
@@ -47,6 +47,10 @@ print(f"compression efficiency (cosine, paper Fig. 7 metric): "
 recon = threesfc.decode(model.syn_loss, w_global, enc.syn, enc.s)
 err = flat.tree_norm(flat.tree_sub(recon, enc.recon))
 print(f"server decode == client recon: L2 diff {float(err):.2e} (exactness)")
+fl = flat.Flattener(w_global)
+fcos, frel = baselines.reconstruction_stats(fl.flatten(g_accum), fl.flatten(recon))
+print(f"reconstruction fidelity vs true update: cos {float(fcos):+.3f}, "
+      f"rel L2 err {float(frel):.3f}")
 w_next = jax.tree.map(lambda p, u: p - u, w_global, recon)
 
 te = make_class_image_dataset(jax.random.PRNGKey(3), 400, (28, 28, 1), 10)

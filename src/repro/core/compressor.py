@@ -22,12 +22,31 @@ import numpy as np
 
 from repro.core import baselines, fedsynth, flat, threesfc
 from repro.configs.base import CompressorConfig
+from repro.kernels import ops
 
 
 class CompressMetrics(NamedTuple):
     cosine: jax.Array                # compression efficiency (Fig. 7)
     payload_floats: jax.Array        # accounted wire size this round
     aux: jax.Array                   # method-specific (3SFC: objective; else 0)
+
+
+class TreeCompressed(NamedTuple):
+    """What a per-method ``compress_tree`` hands back to the EF wrapper.
+
+    ``cosine`` (when not None) is the already-computed cos(recon, u), so the
+    wrapper skips its own ``tree_cosine`` pass; ``direction``/``scale`` (when
+    not None) factor ``recon = scale · direction``, letting the EF update run
+    as one fused ``e' = u − s·direction`` stream (``kernels.ops.
+    tree_ef_update``) instead of reading the materialized recon again.
+    """
+
+    recon: Any
+    floats: jax.Array
+    aux: jax.Array
+    cosine: Optional[jax.Array] = None
+    direction: Any = None
+    scale: Optional[jax.Array] = None
 
 
 class TreeCompressor:
@@ -55,20 +74,26 @@ def _leaf_k(leaf, ratio: float) -> int:
 
 
 def _ef_wrap(cfg, compress_tree):
-    """Generic tree EF (Eq. 6) around a (key, u_tree, params)->recon closure."""
+    """Generic tree EF (Eq. 6) around a (key, u_tree, params)->TreeCompressed
+    closure. Reuses the method's own stats where offered (see TreeCompressed)
+    so the wrapper adds zero extra O(d) reduction passes for 3SFC."""
 
     def step(key, g_tree, e_tree, params):
         if cfg.error_feedback:
             u = flat.tree_add(g_tree, e_tree)
         else:
             u = g_tree
-        recon, floats, aux = compress_tree(key, u, params)
+        out = compress_tree(key, u, params)
         if cfg.error_feedback:
-            e_new = flat.tree_sub(u, recon)
+            if out.direction is not None:
+                e_new = ops.tree_ef_update(u, out.direction, out.scale)
+            else:
+                e_new = flat.tree_sub(u, out.recon)
         else:
             e_new = e_tree
-        cos = flat.tree_cosine(recon, u)
-        return recon, e_new, CompressMetrics(cos, floats, aux)
+        cos = out.cosine if out.cosine is not None \
+            else flat.tree_cosine(out.recon, u)
+        return out.recon, e_new, CompressMetrics(cos, out.floats, out.aux)
 
     return step
 
@@ -105,7 +130,10 @@ def make_compressor(
     # ---- per-method tree compression --------------------------------------
     if kind == "identity":
         def compress_tree(key, u, params):
-            return u, jnp.float32(payload_floats_fn(params)), jnp.float32(0)
+            # recon == u exactly, so the efficiency cosine is 1 by identity —
+            # no reduction pass needed.
+            return TreeCompressed(u, jnp.float32(payload_floats_fn(params)),
+                                  jnp.float32(0), cosine=jnp.float32(1.0))
 
     elif kind == "topk":
         def compress_tree(key, u, params):
@@ -116,7 +144,8 @@ def make_compressor(
                 kept = jnp.zeros_like(v).at[idx].set(v[idx])
                 return kept.reshape(l.shape)
             recon = jax.tree_util.tree_map(leaf, u)
-            return recon, jnp.float32(payload_floats_fn(params)), jnp.float32(0)
+            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
+                                  jnp.float32(0))
 
     elif kind == "randk":
         def compress_tree(key, u, params):
@@ -130,7 +159,8 @@ def make_compressor(
                 kept = jnp.zeros_like(v).at[idx].set(v[idx])
                 out.append(kept.reshape(l.shape))
             recon = jax.tree_util.tree_unflatten(treedef, out)
-            return recon, jnp.float32(payload_floats_fn(params)), jnp.float32(0)
+            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
+                                  jnp.float32(0))
 
     elif kind == "signsgd":
         def compress_tree(key, u, params):
@@ -138,7 +168,8 @@ def make_compressor(
                 scale = jnp.mean(jnp.abs(l))
                 return scale * jnp.sign(l)
             recon = jax.tree_util.tree_map(leaf, u)
-            return recon, jnp.float32(payload_floats_fn(params)), jnp.float32(0)
+            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
+                                  jnp.float32(0))
 
     elif kind == "stc":
         def compress_tree(key, u, params):
@@ -151,7 +182,8 @@ def make_compressor(
                 kept = jnp.zeros_like(v).at[idx].set(mu * jnp.sign(vals))
                 return kept.reshape(l.shape)
             recon = jax.tree_util.tree_map(leaf, u)
-            return recon, jnp.float32(payload_floats_fn(params)), jnp.float32(0)
+            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
+                                  jnp.float32(0))
 
     elif kind == "threesfc":
         assert loss_fn is not None and syn_spec is not None
@@ -162,7 +194,11 @@ def make_compressor(
                 loss_fn, params, u, syn0,
                 steps=cfg.syn_steps, lr=cfg.syn_lr, lam=cfg.l2_coef,
             )
-            return res.recon, jnp.float32(payload_floats_fn(params)), res.objective
+            # encode's fused stats triple already carries cos(recon, u) and
+            # the (gw, s) factorization — EF and metrics add no extra passes.
+            return TreeCompressed(res.recon, jnp.float32(payload_floats_fn(params)),
+                                  res.objective, cosine=res.cosine,
+                                  direction=res.gw, scale=res.s)
 
     elif kind == "fedsynth":
         assert loss_fn is not None and syn_spec is not None
@@ -174,7 +210,8 @@ def make_compressor(
                 unroll_steps=cfg.unroll_steps, opt_steps=max(cfg.syn_steps, 10),
                 lr=local_lr, syn_lr=cfg.syn_lr,
             )
-            return res.recon, jnp.float32(payload_floats_fn(params)), res.l2
+            return TreeCompressed(res.recon, jnp.float32(payload_floats_fn(params)),
+                                  res.l2)
 
     else:
         raise ValueError(f"unknown compressor kind {kind!r}")

@@ -98,22 +98,43 @@ def soft_xent(logits: jax.Array, label_logits: jax.Array) -> jax.Array:
     return -jnp.mean(jnp.sum(target * logp, axis=-1))
 
 
+_EPS = 1e-12
+
+
 def _objective(
     loss_fn: LossFn, params: flat.PyTree, syn: SynData, target: flat.PyTree, lam: float
-) -> Tuple[jax.Array, flat.PyTree]:
-    """Eq. 9 value and the synthetic gradient ∇_w F(D_syn, w) (aux)."""
+) -> Tuple[jax.Array, Tuple[flat.PyTree, jax.Array]]:
+    """Eq. 9 value plus aux ``(gw, stats)``.
+
+    ``stats = (⟨gw,t⟩, ||gw||², ||t||²)`` comes from ONE fused HBM pass
+    (``flat.tree_stats``); Eq. 9's cosine, Eq. 8's scale and the reported
+    compression efficiency are all scalar algebra on this same triple, so
+    each objective evaluation reads the gradient trees exactly once.
+    """
     gw = jax.grad(loss_fn)(params, syn)
-    cos = flat.tree_cosine(gw, target)
+    stats = flat.tree_stats(gw, target)
+    dot, gg, tt = stats[0], stats[1], stats[2]
+    cos = dot / (jnp.sqrt(gg) * jnp.sqrt(tt) + _EPS)
     reg = lam * (flat.tree_sqnorm([syn.x, syn.y, syn.y_rank]))
-    return 1.0 - jnp.abs(cos) + reg, gw
+    return 1.0 - jnp.abs(cos) + reg, (gw, stats)
 
 
 class EncodeResult(NamedTuple):
     syn: SynData
     s: jax.Array                     # scaling coefficient (Eq. 8)
-    recon: flat.PyTree               # s * ∇_w F(D_syn, w^t) — what the server sees
+    gw: flat.PyTree                  # ∇_w F(D_syn, w^t) at the final D_syn
     cosine: jax.Array                # compression efficiency (Fig. 7 metric)
     objective: jax.Array             # final Eq. 9 value
+    stats: jax.Array                 # (⟨gw,t⟩, ||gw||², ||t||²) fused triple
+
+    @property
+    def recon(self) -> flat.PyTree:
+        """s · ∇_w F(D_syn, w^t) — what the server sees (Eq. 10).
+
+        Materialized on demand: EF paths that only need ``e' = u − s·gw``
+        (``kernels.ops.tree_ef_update``) never instantiate this tree.
+        """
+        return flat.tree_scale(self.gw, self.s)
 
 
 def encode(
@@ -135,34 +156,60 @@ def encode(
     recovered with ``normalize_updates=False``; both are exposed because the
     normalized variant is markedly more robust across the 10 assigned
     architectures (recorded as a beyond-paper change in DESIGN.md).
+
+    Perf: every objective evaluation reduces the gradient trees exactly once
+    (the fused ``flat.tree_stats`` triple); s, the efficiency cosine and the
+    Eq. 9 value are scalar algebra on that triple, and the reconstruction is
+    returned factored as (gw, s) so EF consumers can stream
+    ``e' = u − s·gw`` without materializing s·gw (see ``EncodeResult.recon``).
     """
 
-    def obj_only(syn: SynData) -> jax.Array:
-        val, _ = _objective(loss_fn, params, syn, target, lam)
-        return val
+    def obj_aux(syn: SynData):
+        return _objective(loss_fn, params, syn, target, lam)
 
-    grad_obj = jax.grad(obj_only)
+    vag = jax.value_and_grad(obj_aux, has_aux=True)
 
-    def step(syn: SynData, _):
-        g = grad_obj(syn)
+    def update(syn: SynData, g: SynData) -> SynData:
         if normalize_updates:
             def upd(p, gi):
                 rms = jnp.sqrt(jnp.mean(gi * gi) + 1e-12)
                 return p - lr * gi / rms
-            syn = SynData(*[upd(p, gi) for p, gi in zip(syn, g)])
-        else:
-            syn = SynData(*[p - lr * gi for p, gi in zip(syn, g)])
-        return syn, None
+            return SynData(*[upd(p, gi) for p, gi in zip(syn, g)])
+        return SynData(*[p - lr * gi for p, gi in zip(syn, g)])
 
-    syn, _ = jax.lax.scan(step, syn0, None, length=steps)
+    # One scan of steps+1 evaluations: iterations 0..S-1 run grad-of-grad
+    # and apply the GD update; the final iteration evaluates (obj, gw, stats)
+    # at the *returned* D_syn with a plain inner backward (cond keeps the
+    # outer backward off that step — the predicate is the unbatched scan
+    # index, so vmap'd clients keep the branch, not a select). The last
+    # carry therefore already holds everything Eq. 8/9 need — no separate
+    # `_objective` recompute after the loop, and since the final branch's
+    # zero gradient makes `update` the identity, the carry's syn is exactly
+    # the one gw was evaluated at (decode exactness, Eq. 10).
+    def step(carry, i):
+        syn = carry[0]
 
-    obj_val, gw = _objective(loss_fn, params, syn, target, lam)
-    num = flat.tree_dot(target, gw)
-    den = flat.tree_sqnorm(gw) + 1e-12
-    s = num / den                                            # Eq. 8
-    recon = flat.tree_scale(gw, s)
-    cos = flat.tree_cosine(recon, target)
-    return EncodeResult(syn, s, recon, cos, obj_val)
+        def eval_and_grad(syn):
+            (val, (gw, st)), g = vag(syn)
+            return val, gw, st, g
+
+        def eval_only(syn):
+            val, (gw, st) = obj_aux(syn)
+            return val, gw, st, jax.tree_util.tree_map(jnp.zeros_like, syn)
+
+        val, gw, st, g = jax.lax.cond(i < steps, eval_and_grad, eval_only, syn)
+        return (update(syn, g), val, gw, st), None
+
+    gw0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(jnp.shape(p), jnp.result_type(p)), params)
+    init = (syn0, jnp.zeros((), jnp.float32), gw0, jnp.zeros((3,), jnp.float32))
+    (syn, obj_val, gw, stats), _ = jax.lax.scan(step, init, jnp.arange(steps + 1))
+
+    dot, gg = stats[0], stats[1]
+    s = dot / (gg + _EPS)                                    # Eq. 8
+    # cos(s·gw, target) = sign(s) · cos(gw, target), from the same triple
+    cos = jnp.sign(s) * dot / (jnp.sqrt(gg) * jnp.sqrt(stats[2]) + _EPS)
+    return EncodeResult(syn, s, gw, cos, obj_val, stats)
 
 
 def decode(loss_fn: LossFn, params: flat.PyTree, syn: SynData, s: jax.Array) -> flat.PyTree:

@@ -107,6 +107,7 @@ def make_fl_round(
         "fused_decode needs the 3SFC syn_loss_fn + syn_spec"
     from jax.sharding import PartitionSpec as P
     from repro.core import threesfc
+    from repro.kernels import ops
 
     ccfg = cfg.compressor
 
@@ -118,8 +119,11 @@ def make_fl_round(
         res = threesfc.encode(syn_loss_fn, global_params, u, syn0,
                               steps=ccfg.syn_steps, lr=ccfg.syn_lr,
                               lam=ccfg.l2_coef)
-        # EF update is client-local (recon never crosses the network)
-        ef_new = flat.tree_sub(u, res.recon) if ccfg.error_feedback else ef_i
+        # EF update is client-local (recon never crosses the network); the
+        # fused e' = u − s·∇F stream means the recon tree is NEVER
+        # materialized on this path — the server rebuilds it from (D_syn, s).
+        ef_new = ops.tree_ef_update(u, res.gw, res.s) \
+            if ccfg.error_feedback else ef_i
         return res.syn, res.s, ef_new, loss, res.cosine
 
     def _replicate(x):
@@ -150,7 +154,8 @@ def make_fl_round(
         rm = RoundMetrics(
             loss=jnp.mean(losses),
             cosine=cosines,
-            payload_floats=jnp.full_like(losses, float(syn_spec.floats + 1)),
+            # scalar, matching the default path's jnp.mean reduction
+            payload_floats=jnp.float32(syn_spec.floats + 1),
             update_norm=flat.tree_norm(agg),
         )
         return FLState(new_params, ef_new, state.round + 1), rm

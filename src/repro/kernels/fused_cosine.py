@@ -11,6 +11,20 @@ each grid step streams a (BLOCK_ROWS, 1024) tile of x and y through VMEM
 (2 × 512 KB) and accumulates into a (1, 3) f32 accumulator that lives in the
 output block (same block every step — the TPU grid is sequential, so this is
 the standard Pallas reduction idiom).
+
+HBM-pass accounting
+-------------------
+Per call over d-element operands (f32):
+
+    fused (this kernel) : read x once + read y once          = 2d·4 bytes
+    unfused dot+norms   : x·y (2d), ||x||² (d), ||y||² (d)   = 4d·4 bytes
+    seed encoder total  : dot + sqnorm + 2×cosine + recon    ≈ 8 passes
+
+``benchmarks/bench_kernels.py`` measures this structurally via XLA
+``cost_analysis`` bytes-accessed on the lowered reductions and records the
+before/after numbers in ``BENCH_kernels.json``; ``ops.tree_fused_stats``
+extends the same single-pass contract to whole gradient pytrees (chunked
+leaf streaming, no monolithic concatenate).
 """
 from __future__ import annotations
 

@@ -1,0 +1,70 @@
+"""Hypothesis passthrough with a deterministic fallback.
+
+The tier-1 environment does not ship ``hypothesis``; these tests only use a
+tiny slice of its API (``given``/``settings`` + integer/float/sampled_from
+strategies), so when the real package is absent we degrade to a seeded,
+deterministic example sweep: each ``@given`` test runs against a fixed
+number of pseudo-random draws from the declared strategies. Properties are
+checked on concrete examples either way — with real hypothesis installed
+this module is a pure re-export (no shrinking is lost).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 10  # cap: keep the CPU suite fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    class st:  # noqa: N801 - mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False, width=64):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(f):
+            f._hypo_max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(*strats, **kw_strats):
+        def deco(f):
+            # no functools.wraps: __wrapped__ would make pytest unwrap to
+            # f's signature and hunt fixtures for the strategy params
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_hypo_max_examples", 10),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    vals = [s._draw(rng) for s in strats]
+                    kws = {k: s._draw(rng) for k, s in kw_strats.items()}
+                    f(*args, *vals, **kws, **kwargs)
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco

@@ -6,7 +6,7 @@ the paper's Eq. 6 and the property behind the w/-EF ablation (C3).
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import baselines, error_feedback as ef
 

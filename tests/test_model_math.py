@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -128,10 +128,10 @@ def test_moe_respects_router():
     expert's SwiGLU applied to x (up to capacity truncation)."""
     d, ff, E = 8, 16, 4
     p = moe_mod.moe_init(jax.random.PRNGKey(0), d, ff, E)
-    # bias router hard toward expert 2
-    router = jnp.full((d, E), -100.0).at[:, 2].set(100.0)
-    p = dict(p, router=router * 0 + jnp.asarray([-100., -100., 100., -100.]))
-    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (1, 2, d))
+    # bias router hard toward expert 2: logits[e] = (sum_d x_d) * r_e, so the
+    # tokens must have positive feature sums for the +100 column to win
+    p = dict(p, router=p["router"] * 0 + jnp.asarray([-100., -100., 100., -100.]))
+    x = 0.05 + 0.1 * jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (1, 2, d)))
     out = moe_mod.moe_ffn(p, x, experts_per_token=1, capacity_factor=8.0)
     h = jnp.einsum("bsd,df->bsf", x, p["w_in"][2])
     g = jnp.einsum("bsd,df->bsf", x, p["w_gate"][2])

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.configs.base import CompressorConfig
 from repro.core import flat, threesfc
@@ -74,6 +74,32 @@ def test_recon_is_colinear_with_syn_grad(setup):
     res = threesfc.encode(model.syn_loss, params, target, syn0, steps=1, lr=0.1)
     gw = jax.grad(model.syn_loss)(params, res.syn)
     assert abs(abs(float(flat.tree_cosine(res.recon, gw))) - 1.0) < 1e-5
+
+
+def test_encode_aux_matches_fresh_objective(setup):
+    """The (obj, gw, stats) carried out of the last scan step equal a fresh
+    ``_objective`` evaluation at the *returned* D_syn — i.e. the final
+    recompute the seed encoder did is genuinely redundant now."""
+    model, params, target, spec = setup
+    syn0 = threesfc.init_syn(jax.random.PRNGKey(8), spec)
+    res = threesfc.encode(model.syn_loss, params, target, syn0, steps=2, lr=0.1)
+    val, (gw, st) = threesfc._objective(
+        model.syn_loss, params, res.syn, target, 0.0)
+    np.testing.assert_allclose(res.objective, val, rtol=1e-6)
+    np.testing.assert_allclose(res.stats, st, rtol=1e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5,
+                                                         atol=1e-8),
+                 res.gw, gw)
+
+
+def test_encode_cosine_matches_recon_cosine(setup):
+    """res.cosine (derived from the fused stats triple via the sign trick)
+    equals a direct tree_cosine of the materialized recon."""
+    model, params, target, spec = setup
+    syn0 = threesfc.init_syn(jax.random.PRNGKey(9), spec)
+    res = threesfc.encode(model.syn_loss, params, target, syn0, steps=1, lr=0.1)
+    want = flat.tree_cosine(res.recon, target)
+    np.testing.assert_allclose(res.cosine, want, rtol=1e-5, atol=1e-7)
 
 
 def test_budget_accounting(setup):

@@ -1,0 +1,187 @@
+"""tree_fused_stats engine: parity vs ref.py / naive tree_dot across ragged
+leaf shapes, mixed dtypes, interpret + jit-compiled modes, and the AD/vmap
+contracts the 3SFC encoder relies on (custom-JVP grad-of-grad)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, flat
+from repro.kernels import ops, ref
+
+# ragged on purpose: scalar leaf, sub-lane leaf, exact tile, tile+1, odd big
+RAGGED_SHAPES = [(), (7,), (1024,), (1025,), (3, 341), (128, 1024), (13, 77, 5)]
+
+
+def _pair(key, shapes, dtypes=None):
+    ks = jax.random.split(key, 2 * max(1, len(shapes)))
+    dtypes = dtypes or [jnp.float32] * len(shapes)
+    a = {f"p{i}": jax.random.normal(ks[2 * i], s, dt)
+         for i, (s, dt) in enumerate(zip(shapes, dtypes))}
+    b = {f"p{i}": jax.random.normal(ks[2 * i + 1], s, dt)
+         for i, (s, dt) in enumerate(zip(shapes, dtypes))}
+    return a, b
+
+
+def _oracle(a, b):
+    """Whole-tree stats via ref.py on the monolithic concat (the contract)."""
+    fa = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                          for l in jax.tree.leaves(a)])
+    fb = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                          for l in jax.tree.leaves(b)])
+    return ref.fused_cosine(fa, fb)
+
+
+def test_ragged_tree_matches_oracle():
+    a, b = _pair(jax.random.PRNGKey(0), RAGGED_SHAPES)
+    got = ops.tree_fused_stats(a, b)
+    np.testing.assert_allclose(got, _oracle(a, b), rtol=2e-4)
+
+
+def test_matches_naive_tree_dot():
+    a, b = _pair(jax.random.PRNGKey(1), RAGGED_SHAPES)
+    st = flat.tree_stats(a, b)
+    np.testing.assert_allclose(st[0], flat.tree_dot(a, b), rtol=1e-5)
+    np.testing.assert_allclose(st[1], flat.tree_sqnorm(a), rtol=2e-4)
+    np.testing.assert_allclose(st[2], flat.tree_sqnorm(b), rtol=2e-4)
+
+
+def test_single_scalar_leaf():
+    st = ops.tree_fused_stats({"w": jnp.float32(3.0)}, {"w": jnp.float32(-2.0)})
+    np.testing.assert_allclose(st, [-6.0, 9.0, 4.0], rtol=1e-6)
+
+
+def test_empty_tree_and_empty_leaf():
+    np.testing.assert_array_equal(ops.tree_fused_stats({}, {}), jnp.zeros(3))
+    a = {"e": jnp.zeros((0,)), "x": jnp.ones((5,))}
+    b = {"e": jnp.zeros((0,)), "x": 2.0 * jnp.ones((5,))}
+    np.testing.assert_allclose(ops.tree_fused_stats(a, b), [10.0, 5.0, 20.0],
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtypes", [
+    [jnp.bfloat16] * len(RAGGED_SHAPES),
+    [jnp.bfloat16 if i % 2 else jnp.float32 for i in range(len(RAGGED_SHAPES))],
+])
+def test_mixed_dtype_trees(dtypes):
+    a, b = _pair(jax.random.PRNGKey(2), RAGGED_SHAPES, dtypes)
+    got = ops.tree_fused_stats(a, b)
+    np.testing.assert_allclose(got, _oracle(a, b), rtol=5e-3)
+    assert got.dtype == jnp.float32
+
+
+def test_chunking_crosses_leaf_boundaries():
+    """Force multiple kernel chunks by shrinking the chunk budget."""
+    old = ops.TREE_CHUNK_ELEMS
+    ops.TREE_CHUNK_ELEMS = 2048
+    try:
+        a, b = _pair(jax.random.PRNGKey(3), [(5000,), (17,), (3000,)])
+        np.testing.assert_allclose(ops.tree_fused_stats(a, b), _oracle(a, b),
+                                   rtol=2e-4)
+    finally:
+        ops.TREE_CHUNK_ELEMS = old
+
+
+def test_jit_compiled_mode():
+    a, b = _pair(jax.random.PRNGKey(4), RAGGED_SHAPES)
+    got = jax.jit(ops.tree_fused_stats)(a, b)
+    np.testing.assert_allclose(got, _oracle(a, b), rtol=2e-4)
+
+
+def test_vmap_batched_clients():
+    """fl/round vmaps the compressor over clients; stats must batch."""
+    def one(key):
+        a, b = _pair(key, [(300,), (1025,)])
+        return a, b
+    keys = jax.random.split(jax.random.PRNGKey(5), 4)
+    ab = [one(k) for k in keys]
+    a = jax.tree.map(lambda *xs: jnp.stack(xs), *[x[0] for x in ab])
+    b = jax.tree.map(lambda *xs: jnp.stack(xs), *[x[1] for x in ab])
+    got = jax.vmap(ops.tree_fused_stats)(a, b)
+    want = jnp.stack([_oracle(x, y) for x, y in ab])
+    np.testing.assert_allclose(got, want, rtol=2e-4)
+
+
+def test_grad_and_grad_of_grad():
+    """The encoder differentiates cosine-of-stats twice (grad-of-grad)."""
+    a, b = _pair(jax.random.PRNGKey(6), [(129,), (1025,)])
+
+    def cos(a):
+        d, aa, bb = flat.tree_stats(a, b)
+        return d / (jnp.sqrt(aa) * jnp.sqrt(bb) + 1e-12)
+
+    def cos_ref(a):
+        fa = jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(a)])
+        fb = jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(b)])
+        return jnp.vdot(fa, fb) / (jnp.linalg.norm(fa) * jnp.linalg.norm(fb)
+                                   + 1e-12)
+
+    g = jax.grad(cos)(a)
+    gr = jax.grad(cos_ref)(a)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-4,
+                                                         atol=1e-6), g, gr)
+
+    def gnorm(f):
+        return lambda a: flat.tree_sqnorm(jax.grad(f)(a))
+
+    gg = jax.grad(gnorm(cos))(a)
+    ggr = jax.grad(gnorm(cos_ref))(a)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-3,
+                                                         atol=1e-6), gg, ggr)
+
+
+def test_mismatched_trees_raise():
+    """Lockstep streaming must reject shape mismatches loudly (zero padding
+    would otherwise silently swallow them)."""
+    with pytest.raises(ValueError, match="lockstep"):
+        ops.tree_fused_stats({"w": jnp.ones((4,))}, {"w": jnp.ones((6,))})
+    with pytest.raises(ValueError, match="lockstep"):
+        ops.tree_ef_update({"w": jnp.ones((2, 3))}, {"w": jnp.ones((3, 2))},
+                           jnp.float32(1.0))
+
+
+def test_tree_ef_update_chunked_across_leaves():
+    """EF streaming packs leaves into shared chunks; outputs must slice back
+    to the right leaves even when a chunk boundary splits a leaf."""
+    old = ops.TREE_CHUNK_ELEMS
+    ops.TREE_CHUNK_ELEMS = 2048
+    try:
+        u, d = _pair(jax.random.PRNGKey(10), [(5000,), (3,), (1500,)])
+        s = jnp.float32(-1.25)
+        got = ops.tree_ef_update(u, d, s)
+        want = jax.tree.map(lambda ui, di: ui - s * di, u, d)
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-5,
+                                                             atol=1e-6),
+                     got, want)
+    finally:
+        ops.TREE_CHUNK_ELEMS = old
+
+
+def test_tree_ef_update_matches_axpy():
+    u, d = _pair(jax.random.PRNGKey(7), RAGGED_SHAPES)
+    s = jnp.float32(0.37)
+    got = ops.tree_ef_update(u, d, s)
+    want = jax.tree.map(lambda ui, di: ui - s * di, u, d)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-5,
+                                                         atol=1e-6), got, want)
+
+
+def test_reconstruction_stats_fused():
+    v = jax.random.normal(jax.random.PRNGKey(8), (4097,))
+    r = 0.8 * v + 0.1 * jax.random.normal(jax.random.PRNGKey(9), (4097,))
+    cos, rel = baselines.reconstruction_stats(v, r)
+    want_cos = jnp.vdot(r, v) / (jnp.linalg.norm(r) * jnp.linalg.norm(v))
+    want_rel = jnp.linalg.norm(r - v) / jnp.linalg.norm(v)
+    np.testing.assert_allclose(cos, want_cos, rtol=1e-4)
+    np.testing.assert_allclose(rel, want_rel, rtol=1e-3)
+
+
+def test_reconstruction_stats_small_error_regime():
+    """The error term must resolve errors far below f32 cancellation of the
+    ||r||² − 2⟨r,v⟩ + ||v||² identity (~3e-4 relative)."""
+    v = jax.random.normal(jax.random.PRNGKey(11), (1 << 20,))
+    r = v + 1e-4 * jax.random.normal(jax.random.PRNGKey(12), (1 << 20,))
+    _, rel = baselines.reconstruction_stats(v, r)
+    want = jnp.linalg.norm(r - v) / jnp.linalg.norm(v)
+    assert float(want) > 0
+    np.testing.assert_allclose(rel, want, rtol=1e-3)
