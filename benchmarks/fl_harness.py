@@ -4,16 +4,22 @@ Runs the full federated pipeline: synthetic class-conditional dataset with
 the paper's shapes -> Dirichlet non-iid partition -> N clients x K local SGD
 steps -> EF-compressed uplink -> server aggregate -> test accuracy curve.
 
-Budget accounting reproduces the paper exactly: for MLP (199,210 params) the
+Since PR 2 the round loop is the device-resident ``repro.fl.engine``: the
+partition lives on device as padded index pools, batches are gathered inside
+the jitted scan (no host numpy in the hot loop), and each eval block of
+``eval_every`` rounds costs one dispatch + one host sync with the EF state
+donated across blocks.
+
+Budget accounting reproduces the paper exactly (see ``repro.fl.budget``,
+shared with the ``launch/train.py`` driver): for MLP (199,210 params) the
 3SFC payload is 28·28·1 + 10 + 1 = 795 floats -> compression ratio 250.6x,
-the number in the paper's Table 2. Competitor knobs are derived from the
-same budget (DGC: 2k = B; STC/signSGD: the 32x quantization limit).
+the number in the paper's Table 2.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,19 +30,14 @@ from repro.core.compressor import make_compressor
 from repro.core import flat
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset
-from repro.fl.round import fl_init, make_fl_round
+from repro.fl.budget import matched_compressors, payload_budget
+from repro.fl.engine import RoundEngine, device_pools, vision_batcher
+from repro.fl.round import make_fl_round
 from repro.models.build import vision_syn_spec
-from repro.models.cnn import (CIFAR10_SPEC, CIFAR100_SPEC, EMNIST_SPEC,
-                              FMNIST_SPEC, MNIST_SPEC, VisionSpec, accuracy,
-                              make_paper_model)
+from repro.models.cnn import DATASETS, accuracy, make_paper_model
 
-DATASETS = {
-    "mnist": MNIST_SPEC,
-    "emnist": EMNIST_SPEC,
-    "fmnist": FMNIST_SPEC,
-    "cifar10": CIFAR10_SPEC,
-    "cifar100": CIFAR100_SPEC,
-}
+__all__ = ["DATASETS", "ExperimentResult", "payload_budget",
+           "matched_compressors", "run_fl", "fmt_table"]
 
 
 @dataclasses.dataclass
@@ -57,29 +58,6 @@ class ExperimentResult:
     @property
     def comp_ratio(self) -> float:
         return 1.0 / self.comp_rate if self.comp_rate else float("inf")
-
-
-def payload_budget(model_name: str, spec: VisionSpec, syn_batch: int = 1) -> float:
-    """3SFC budget B for this (model, dataset): syn pixels + soft labels + s."""
-    return float(syn_batch * (int(np.prod(spec.input_shape)) + spec.num_classes) + 1)
-
-
-def matched_compressors(model_name: str, spec: VisionSpec, d: int,
-                        syn_batch: int = 1) -> Dict[str, CompressorConfig]:
-    """The paper's five methods at the paper's budget relations."""
-    B = payload_budget(model_name, spec, syn_batch)
-    topk_ratio = max(B / 2.0, 1.0) / d          # 2k floats = B
-    stc_ratio = (d / 33.0) / d                  # k + k/32 + 1 ~= d/32
-    return {
-        "fedavg": CompressorConfig(kind="identity", error_feedback=False),
-        "dgc": CompressorConfig(kind="topk", keep_ratio=topk_ratio),
-        "signsgd": CompressorConfig(kind="signsgd"),
-        "stc": CompressorConfig(kind="stc", keep_ratio=stc_ratio),
-        # S=10 encoder iterations (Algorithm 1 line 7; "single-step" refers to
-        # the single SIMULATION step, vs FedSynth's K-step unroll)
-        "threesfc": CompressorConfig(kind="threesfc", syn_batch=syn_batch,
-                                     syn_steps=10, syn_lr=0.1),
-    }
 
 
 def run_fl(
@@ -103,7 +81,7 @@ def run_fl(
     t_start = time.time()
     spec = DATASETS[dataset]
     key = jax.random.PRNGKey(seed)
-    kd, kt, km, kr = jax.random.split(key, 4)
+    kd, kt, km, _ = jax.random.split(key, 4)
 
     train = make_class_image_dataset(kd, train_size, spec.input_shape,
                                      spec.num_classes, sigma=sigma)
@@ -121,8 +99,12 @@ def run_fl(
     fl_cfg = FLConfig(num_clients=num_clients, local_steps=local_steps,
                       local_lr=local_lr, local_batch=local_batch,
                       compressor=comp, seed=seed)
-    round_fn = jax.jit(make_fl_round(model.loss, compressor, fl_cfg))
-    state = fl_init(params, num_clients)
+    engine = RoundEngine(
+        make_fl_round(model.loss, compressor, fl_cfg),
+        vision_batcher(train.x, train.y, device_pools(parts),
+                       local_steps, local_batch),
+        seed=seed)
+    state = engine.init_state(params, num_clients)
 
     test_x = jnp.asarray(test.x)
     test_y = jnp.asarray(test.y)
@@ -131,26 +113,14 @@ def run_fl(
     def eval_acc(p):
         return accuracy(model.apply(p, test_x), test_y)
 
-    rng = np.random.default_rng(seed + 1)
     payload = compressor.payload_floats(params)
 
-    accs, losses, coses = [], [], []
-    for r in range(rounds):
-        # host-side batch sampling (non-iid pools per client)
-        bx = np.empty((num_clients, local_steps, local_batch, *spec.input_shape),
-                      np.float32)
-        by = np.empty((num_clients, local_steps, local_batch), np.int32)
-        for i, pool in enumerate(parts):
-            idx = rng.choice(pool, size=(local_steps, local_batch), replace=True)
-            bx[i] = train.x[idx]
-            by[i] = train.y[idx]
-        batches = {"x": jnp.asarray(bx), "y": jnp.asarray(by)}
-        kr, kround = jax.random.split(kr)
-        state, metrics = round_fn(state, batches, kround)
-        losses.append(float(metrics.loss))
-        coses.append(float(jnp.mean(metrics.cosine)))
-        if (r + 1) % eval_every == 0 or r == rounds - 1:
-            accs.append(float(eval_acc(state.params)))
+    state, hist = engine.run(state, rounds, eval_every=eval_every,
+                             eval_fn=lambda st, ms, r: float(eval_acc(st.params)))
+    losses = [float(v) for v in hist.metrics.loss]
+    cos = np.asarray(hist.metrics.cosine)          # (rounds, clients)
+    coses = [float(v) for v in cos.reshape(len(losses), -1).mean(axis=1)]
+    accs = [v for _, v in hist.evals]
 
     return ExperimentResult(
         name=label or f"{model_name}/{dataset}/{comp.kind}",

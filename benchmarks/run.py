@@ -15,7 +15,8 @@ import sys
 import time
 
 from benchmarks import (bench_fedsynth, bench_fig1, bench_fig7, bench_kernels,
-                        bench_ssweep, bench_table2, bench_table3, bench_table4)
+                        bench_round_engine, bench_ssweep, bench_table2,
+                        bench_table3, bench_table4)
 
 BENCHES = {
     "fig1": bench_fig1.run,          # convergence vs rate
@@ -26,15 +27,21 @@ BENCHES = {
     "fedsynth": bench_fedsynth.run,  # table1 + fig2/3 collapse
     "ssweep": bench_ssweep.run,      # encoder-iteration knob (Algorithm 1 S)
     "kernels": bench_kernels.run,    # fused-kernel pass accounting
+    "round_engine": bench_round_engine.run,  # scanned engine vs python loop
 }
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", type=str, default="")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        print(f"unknown bench name(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"valid names: {', '.join(BENCHES)}", file=sys.stderr)
+        sys.exit(2)
     t0 = time.time()
     for name in names:
         print(f"\n######## {name} " + "#" * (70 - len(name)))

@@ -1,0 +1,169 @@
+"""Perf-trajectory gate: freshly emitted BENCH_*.json vs the committed ones.
+
+Run the benches first (they rewrite the repo-root ``BENCH_*.json``
+artifacts), then this script; it diffs each fresh artifact against the
+version committed at git HEAD and FAILS (exit 1) on a regression:
+
+* ``BENCH_kernels.json``: any increase in HBM passes per 3SFC objective
+  evaluation (``encoder_fused_kernel_passes``, the BlockSpec contract
+  number — immune to CPU noise), or the single-pass gate flipping false.
+* ``BENCH_round_engine.json``: >5% drop in the engine's driver-path
+  rounds/sec relative to the same run's python-loop baseline (the
+  ``driver.speedup`` ratio — absolute rounds/sec swings 2x+ with load on
+  the shared CI box, but the interleaved per-pair ratio cancels box speed;
+  tolerance configurable with ``--tolerance`` / ``CHECK_BENCH_TOLERANCE``),
+  any new host sync or dispatch per round (structural counters, exact),
+  any per-round upload bytes, or any ``pass_*`` gate flipping false.
+
+Artifacts present in the working tree but not at HEAD are new benches:
+reported and skipped. Exit 2 on usage/setup errors (not a git checkout,
+malformed JSON).
+
+    PYTHONPATH=src python -m benchmarks.run --only kernels,round_engine
+    python scripts/check_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class GitUnavailable(Exception):
+    pass
+
+
+def _check_git():
+    """HEAD must resolve, else every artifact would look 'new' and the gate
+    would pass vacuously — that's a setup error (exit 2), not a clean run."""
+    p = subprocess.run(["git", "rev-parse", "--verify", "HEAD"], cwd=REPO,
+                       capture_output=True, text=True)
+    if p.returncode != 0:
+        raise GitUnavailable(p.stderr.strip() or "git rev-parse HEAD failed")
+
+
+def _committed(name: str):
+    """The artifact as committed at HEAD, or None if it's new at HEAD
+    (_check_git has already ruled out a broken checkout)."""
+    p = subprocess.run(["git", "cat-file", "-e", f"HEAD:{name}"], cwd=REPO,
+                       capture_output=True, text=True)
+    if p.returncode != 0:
+        return None
+    p = subprocess.run(["git", "show", f"HEAD:{name}"], cwd=REPO,
+                       capture_output=True, text=True)
+    if p.returncode != 0:
+        raise GitUnavailable(f"git show HEAD:{name}: {p.stderr.strip()}")
+    return json.loads(p.stdout)
+
+
+def _get(d, path):
+    for k in path.split("."):
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def check_kernels(fresh, base, tol):
+    probs = []
+    f_passes = _get(fresh, "encoder_fused_kernel_passes")
+    b_passes = _get(base, "encoder_fused_kernel_passes")
+    if f_passes is not None and b_passes is not None and \
+            f_passes > b_passes + 1e-9:
+        probs.append(f"HBM passes per objective evaluation increased: "
+                     f"{b_passes:.3f} -> {f_passes:.3f}")
+    if _get(base, "encoder_fused_single_pass") and \
+            not _get(fresh, "encoder_fused_single_pass"):
+        probs.append("encoder_fused_single_pass gate flipped to false")
+    if _get(base, "allclose") and not _get(fresh, "allclose"):
+        probs.append("kernel-vs-oracle allclose flipped to false")
+    return probs
+
+
+def check_round_engine(fresh, base, tol):
+    probs = []
+    f_sp = _get(fresh, "driver.speedup")
+    b_sp = _get(base, "driver.speedup")
+    if f_sp is not None and b_sp is not None and f_sp < (1 - tol) * b_sp:
+        probs.append(f"driver-path rounds/sec (vs same-run loop baseline) "
+                     f"dropped >{tol:.0%}: {b_sp:.2f}x -> {f_sp:.2f}x")
+    for field in ("driver.engine.host_syncs_per_round",
+                  "driver.engine.dispatches_per_round",
+                  "driver.engine.upload_guard_violations"):
+        f_v, b_v = _get(fresh, field), _get(base, field)
+        if f_v is not None and b_v is not None and f_v > b_v + 1e-9:
+            probs.append(f"{field} increased: {b_v:.3f} -> {f_v:.3f}")
+    for gate in ("pass", "pass_driver_speedup", "pass_syncs_per_eval_block",
+                 "pass_no_per_round_upload"):
+        if _get(base, gate) and not _get(fresh, gate):
+            probs.append(f"{gate} gate flipped to false")
+    return probs
+
+
+CHECKS = {
+    "BENCH_kernels.json": check_kernels,
+    "BENCH_round_engine.json": check_round_engine,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_TOLERANCE",
+                                                 "0.05")),
+                    help="fractional rounds/sec drop allowed (default 0.05)")
+    args = ap.parse_args(argv)
+
+    artifacts = sorted(glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    if not artifacts:
+        print("check_bench: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 2
+    try:
+        _check_git()
+    except GitUnavailable as e:
+        print(f"check_bench: not a usable git checkout ({e})", file=sys.stderr)
+        return 2
+    failures = 0
+    for path in artifacts:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                fresh = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"check_bench: cannot read {name}: {e}", file=sys.stderr)
+            return 2
+        try:
+            base = _committed(name)
+        except (GitUnavailable, json.JSONDecodeError) as e:
+            print(f"check_bench: cannot read committed {name}: {e}",
+                  file=sys.stderr)
+            return 2
+        if base is None:
+            print(f"  {name}: new artifact (not at HEAD) — skipped")
+            continue
+        checker = CHECKS.get(name)
+        if checker is None:
+            print(f"  {name}: no regression rules registered — skipped")
+            continue
+        probs = checker(fresh, base, args.tolerance)
+        if probs:
+            failures += len(probs)
+            print(f"  {name}: REGRESSION")
+            for p in probs:
+                print(f"    - {p}")
+        else:
+            print(f"  {name}: ok")
+    if failures:
+        print(f"check_bench: {failures} regression(s) vs HEAD", file=sys.stderr)
+        return 1
+    print("check_bench: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,279 @@
+"""Device-resident multi-round FL engine: scanned rounds, on-device sampling,
+donated EF state.
+
+The seed drivers (``benchmarks/fl_harness.run_fl``, both ``launch/train.py``
+paths) all ran the same Python loop: sample client batches on the host with
+numpy, upload an ``(N, K, B, ...)`` tree every round, dispatch one jitted
+round, then block on ≥2 device→host syncs (``float(m.loss)``,
+``float(jnp.mean(m.cosine))``). This module replaces that loop with a single
+device-resident program:
+
+* the training set and the Dirichlet partition live on device
+  (``device_pools`` pads the ragged per-client index lists to an ``(N, P)``
+  pool matrix — padding is dead weight, never sampled, see the PRNG
+  contract below);
+* per-round batches are *gathered* inside the jitted computation
+  (``vision_batcher`` / ``token_batcher``) — no host numpy, no per-round
+  host→device transfer;
+* ``RoundEngine`` wraps the round function in ``lax.scan`` over a whole
+  eval block, so an L-round block costs ONE dispatch and ONE host sync
+  (the stacked ``RoundMetrics`` fetch) instead of L dispatches + 2L syncs;
+* the scan/jit donates the ``FLState`` argument, so the per-client N×d EF
+  residual tree — the dominant HBM resident — is updated in place instead
+  of being double-buffered across the dispatch boundary.
+
+Sampling-gather PRNG contract
+-----------------------------
+The batch for (round r, client i) is fully determined by the engine seed::
+
+    data_key = fold_in(PRNGKey(seed), 0)           # batch sampling stream
+    round_key = fold_in(PRNGKey(seed), 1)          # compressor-key stream
+    pos_i    = randint(fold_in(fold_in(data_key, r), i), (K, B), 0, size_i)
+    batch_i  = gather(dataset, pools.index[i, pos_i])
+
+``r`` is the *absolute* round counter carried in ``FLState.round`` — not the
+position within a scan block. Folding on the absolute round (instead of
+splitting a carried key) is what makes the stream independent of how rounds
+are grouped into dispatches. The per-round compressor key is derived the
+same way (``fold_in(round_key, r)``).
+
+Why eval cadence = scan length
+------------------------------
+An eval is the one thing that genuinely needs the host: it reads
+``state.params`` (or the caller formats/logs metrics), which forces a
+device→host sync. So the scan should extend exactly to the next eval point
+— any shorter wastes dispatches, any longer would compute past the params
+the eval needs. ``RoundEngine.run`` therefore scans ``eval_every`` rounds
+per dispatch (plus a final remainder block). By the PRNG contract above,
+changing the eval cadence regroups the dispatches but does NOT change the
+training trajectory — blocks [3] and [2, 1] produce bit-identical states
+(tested in tests/test_engine.py::test_eval_cadence_invariance).
+
+Donation safety: ``jit(..., donate_argnums=0)`` consumes the input state's
+buffers — a donated ``FLState`` must never be touched after the dispatch.
+``RoundEngine.init_state`` therefore deep-copies the params it is given
+(the caller's model params survive the first donation), and every ``run*``
+method returns the fresh state that replaces the consumed one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.round import FLState, RoundMetrics, fl_init
+
+PyTree = Any
+# batch_fn(data_key, round_idx) -> per-client stacked batch pytree (N, K, B, ...)
+BatchFn = Callable[[jax.Array, jax.Array], PyTree]
+RoundFn = Callable[[FLState, PyTree, jax.Array], Tuple[FLState, RoundMetrics]]
+
+_DATA_FOLD = 0
+_ROUND_FOLD = 1
+
+
+class ClientPools(NamedTuple):
+    """Padded on-device Dirichlet partition: ``index[i, :size[i]]`` are the
+    dataset rows client ``i`` may sample; ``index[i, size[i]:]`` is padding
+    (zeros) that the sampler never reads (positions are drawn < size[i])."""
+
+    index: jax.Array                 # (N, P) int32
+    size: jax.Array                  # (N,) int32
+
+
+def device_pools(parts: Sequence[np.ndarray]) -> ClientPools:
+    """Materialize a host-side partition (list of ragged index arrays, as
+    produced by ``data.partition.dirichlet_partition``) as device pools."""
+    cap = max(len(p) for p in parts)
+    index = np.zeros((len(parts), cap), np.int32)
+    for i, p in enumerate(parts):
+        index[i, : len(p)] = np.asarray(p, np.int32)
+    size = np.array([len(p) for p in parts], np.int32)
+    return ClientPools(jnp.asarray(index), jnp.asarray(size))
+
+
+def vision_batcher(train_x: np.ndarray, train_y: np.ndarray,
+                   pools: ClientPools, local_steps: int,
+                   local_batch: int) -> BatchFn:
+    """Non-iid ``{"x", "y"}`` batches gathered from device-resident data."""
+    x = jnp.asarray(train_x)
+    y = jnp.asarray(train_y)
+    num_clients = pools.index.shape[0]
+
+    def batch_fn(data_key: jax.Array, round_idx: jax.Array) -> PyTree:
+        kr = jax.random.fold_in(data_key, round_idx)
+
+        def per_client(i):
+            k = jax.random.fold_in(kr, i)
+            pos = jax.random.randint(k, (local_steps, local_batch), 0,
+                                     pools.size[i])
+            return pools.index[i, pos]
+
+        idx = jax.vmap(per_client)(jnp.arange(num_clients))
+        return {"x": x[idx], "y": y[idx]}
+
+    return batch_fn
+
+
+def token_batcher(tokens: np.ndarray, num_clients: int, local_steps: int,
+                  local_batch: int,
+                  extras: Optional[Dict[str, Tuple[int, ...]]] = None) -> BatchFn:
+    """IID ``{"tokens"}`` batches (the LM-smoke protocol) plus optional
+    all-zero multimodal stubs: ``extras`` maps batch key -> trailing shape,
+    materialized as ``(N, K, B, *shape)`` zeros inside the jit (free on
+    device, vs. the seed loop uploading them every round)."""
+    toks = jnp.asarray(tokens)
+    n = toks.shape[0]
+    extras = dict(extras or {})
+
+    def batch_fn(data_key: jax.Array, round_idx: jax.Array) -> PyTree:
+        kr = jax.random.fold_in(data_key, round_idx)
+
+        def per_client(i):
+            k = jax.random.fold_in(kr, i)
+            return jax.random.randint(k, (local_steps, local_batch), 0, n)
+
+        idx = jax.vmap(per_client)(jnp.arange(num_clients))
+        batch = {"tokens": toks[idx]}
+        for name, shape in extras.items():
+            batch[name] = jnp.zeros(
+                (num_clients, local_steps, local_batch, *shape), jnp.float32)
+        return batch
+
+    return batch_fn
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Dispatch/sync accounting, the structural half of BENCH_round_engine."""
+
+    dispatches: int = 0              # jitted computations launched
+    host_syncs: int = 0              # blocking device->host reads
+    rounds: int = 0
+
+    def per_round(self) -> Dict[str, float]:
+        r = max(self.rounds, 1)
+        return {"dispatches_per_round": self.dispatches / r,
+                "host_syncs_per_round": self.host_syncs / r}
+
+
+class RunHistory(NamedTuple):
+    metrics: RoundMetrics            # stacked over all rounds (host arrays)
+    evals: List[Tuple[int, Any]]     # (round, eval_fn result) per eval point
+
+
+class RoundEngine:
+    """Drives ``make_fl_round``-style round functions in eval-sized scans.
+
+    ``run_block``/``run`` is the production path (one dispatch + one sync
+    per block, donated state); ``run_loop`` is the per-round reference loop
+    with the seed driver's dispatch/sync pattern but the *same* on-device
+    sampling — the bit-exactness oracle for the scanned path.
+    """
+
+    def __init__(self, round_fn: RoundFn, batch_fn: BatchFn, *, seed: int = 0,
+                 donate: bool = True):
+        base = jax.random.PRNGKey(seed)
+        self._data_key = jax.random.fold_in(base, _DATA_FOLD)
+        self._round_key = jax.random.fold_in(base, _ROUND_FOLD)
+        self._round_fn = round_fn
+        self._batch_fn = batch_fn
+        self.donate = donate
+        self._blocks: Dict[int, Callable] = {}
+        self._loop_step = None
+        self.stats = EngineStats()
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, params: PyTree, num_clients: int) -> FLState:
+        """``fl_init`` on a deep copy of ``params`` so donation of the
+        engine state can never consume the caller's model tree."""
+        owned = jax.tree_util.tree_map(jnp.copy, params)
+        return fl_init(owned, num_clients)
+
+    # -- the round body (shared by scan and reference loop) ----------------
+    def _round(self, state: FLState) -> Tuple[FLState, RoundMetrics]:
+        batches = self._batch_fn(self._data_key, state.round)
+        key = jax.random.fold_in(self._round_key, state.round)
+        return self._round_fn(state, batches, key)
+
+    def _block(self, length: int) -> Callable:
+        fn = self._blocks.get(length)
+        if fn is None:
+            def blk(state):
+                return jax.lax.scan(lambda s, _: self._round(s), state, None,
+                                    length=length)
+            fn = jax.jit(blk, donate_argnums=(0,) if self.donate else ())
+            self._blocks[length] = fn
+        return fn
+
+    # -- scanned path ------------------------------------------------------
+    def run_block(self, state: FLState,
+                  length: int) -> Tuple[FLState, RoundMetrics]:
+        """``length`` rounds in ONE dispatch; the input ``state`` is consumed
+        (donated) — use only the returned state. The stacked metrics come
+        back via a single ``device_get`` (the block's one host sync)."""
+        state, ms = self._block(length)(state)
+        self.stats.dispatches += 1
+        ms = jax.device_get(ms)
+        self.stats.host_syncs += 1
+        self.stats.rounds += length
+        return state, ms
+
+    def run(self, state: FLState, num_rounds: int, *, eval_every: int = 0,
+            eval_fn: Optional[Callable[[FLState, RoundMetrics, int], Any]] = None,
+            ) -> Tuple[FLState, RunHistory]:
+        """Blocks of ``eval_every`` rounds (plus a remainder block), with
+        ``eval_fn(state, block_metrics, rounds_done)`` called at each block
+        boundary — the seed drivers' eval cadence ((r+1) % eval_every == 0,
+        plus the final round). ``block_metrics`` is the just-fetched stacked
+        ``RoundMetrics`` of the block, so eval-time logging costs no extra
+        sync."""
+        L = eval_every if eval_every > 0 else num_rounds
+        chunks: List[RoundMetrics] = []
+        evals: List[Tuple[int, Any]] = []
+        done = 0
+        while done < num_rounds:
+            length = min(L, num_rounds - done)
+            state, ms = self.run_block(state, length)
+            done += length
+            chunks.append(ms)
+            if eval_fn is not None:
+                evals.append((done, eval_fn(state, ms, done)))
+        if chunks:
+            metrics = RoundMetrics(*[
+                np.concatenate([np.atleast_1d(np.asarray(getattr(c, f)))
+                                for c in chunks])
+                for f in RoundMetrics._fields])
+        else:                        # num_rounds == 0: empty, not None
+            metrics = RoundMetrics(*[np.zeros((0,), np.float32)
+                                     for _ in RoundMetrics._fields])
+        return state, RunHistory(metrics, evals)
+
+    # -- per-round reference loop -----------------------------------------
+    def run_loop(self, state: FLState,
+                 num_rounds: int) -> Tuple[FLState, RoundMetrics]:
+        """Seed-driver dispatch pattern: one jit call per round, two blocking
+        scalar syncs per round (loss, mean cosine) — but the same on-device
+        sampling and round math as the scanned path, so the two are
+        bit-exact. Never donates (the seed loop did not)."""
+        if self._loop_step is None:
+            self._loop_step = jax.jit(self._round)
+        out: List[RoundMetrics] = []
+        for _ in range(num_rounds):
+            state, m = self._loop_step(state)
+            self.stats.dispatches += 1
+            float(m.loss)
+            float(jnp.mean(m.cosine))
+            self.stats.host_syncs += 2
+            self.stats.rounds += 1
+            # oracle record for the bit-exactness tests; by now the round is
+            # fully computed, so this copy is instrumentation, not part of
+            # the counted seed driver pattern
+            out.append(jax.device_get(m))
+        metrics = RoundMetrics(*[
+            np.stack([np.asarray(getattr(m, f)) for m in out])
+            for f in RoundMetrics._fields])
+        return state, metrics

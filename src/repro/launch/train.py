@@ -6,6 +6,12 @@ production-mesh path is exercised by dryrun.py; this driver is the
 "train a ~100M model for a few hundred rounds" deliverable and writes
 checkpoints + a metrics JSONL.
 
+Both paths drive ``repro.fl.engine.RoundEngine``: data and Dirichlet pools
+are device-resident, each eval block of ``--eval-every`` rounds is ONE
+scanned dispatch with the EF state donated in place, and compressor budgets
+come from the shared ``repro.fl.budget`` module (the same construction the
+benchmarks use).
+
     PYTHONPATH=src python -m repro.launch.train --model mlp --dataset mnist \
         --compressor threesfc --rounds 200 --clients 10
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -14,7 +20,6 @@ checkpoints + a metrics JSONL.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
@@ -30,40 +35,27 @@ from repro.core import flat
 from repro.core.compressor import make_compressor
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset, make_token_dataset
-from repro.fl.round import fl_init, make_fl_round
+from repro.fl.budget import matched_compressors
+from repro.fl.engine import (RoundEngine, device_pools, token_batcher,
+                             vision_batcher)
+from repro.fl.round import make_fl_round
 from repro.models.build import build_model, syn_loss_fn, syn_spec_for, vision_syn_spec
-from repro.models.cnn import accuracy, make_paper_model
+from repro.models.cnn import DATASETS, accuracy, make_paper_model
 from repro.models.encdec import EncDec
 
 
-def _compressor_cfg(name: str, d: int, budget: float) -> CompressorConfig:
-    if name == "fedavg":
-        return CompressorConfig(kind="identity", error_feedback=False)
-    if name == "dgc":
-        return CompressorConfig(kind="topk", keep_ratio=max(budget / 2, 1) / d)
-    if name == "signsgd":
-        return CompressorConfig(kind="signsgd")
-    if name == "stc":
-        return CompressorConfig(kind="stc", keep_ratio=1 / 33)
-    if name == "threesfc":
-        return CompressorConfig(kind="threesfc", syn_steps=10, syn_lr=0.1)
-    raise ValueError(name)
-
-
 def train_vision(args):
-    from benchmarks.fl_harness import DATASETS  # shared dataset specs
     spec = DATASETS[args.dataset]
     model = make_paper_model(args.model, spec)
     params = model.init(jax.random.PRNGKey(args.seed))
     d = flat.tree_size(params)
-    budget = float(np.prod(spec.input_shape) + spec.num_classes + 1)
-    comp = _compressor_cfg(args.compressor, d, budget)
+    comp = matched_compressors(args.model, spec, d)[args.compressor]
     syn_spec = vision_syn_spec(spec, comp)
     compressor = make_compressor(comp, loss_fn=model.syn_loss, syn_spec=syn_spec,
                                  local_lr=args.lr)
     fl_cfg = FLConfig(num_clients=args.clients, local_steps=args.local_steps,
-                      local_lr=args.lr, compressor=comp)
-    round_fn = jax.jit(make_fl_round(model.loss, compressor, fl_cfg))
+                      local_lr=args.lr, local_batch=args.batch,
+                      compressor=comp, seed=args.seed)
 
     key = jax.random.PRNGKey(args.seed)
     train = make_class_image_dataset(key, args.train_size, spec.input_shape,
@@ -72,34 +64,32 @@ def train_vision(args):
                                     spec.input_shape, spec.num_classes)
     parts = dirichlet_partition(train.y, args.clients, alpha=args.alpha,
                                 seed=args.seed, min_per_client=args.batch)
-    state = fl_init(params, args.clients)
+    engine = RoundEngine(
+        make_fl_round(model.loss, compressor, fl_cfg),
+        vision_batcher(train.x, train.y, device_pools(parts),
+                       args.local_steps, args.batch),
+        seed=args.seed)
+    state = engine.init_state(params, args.clients)
 
     @jax.jit
     def eval_acc(p):
         return accuracy(model.apply(p, jnp.asarray(test.x)), jnp.asarray(test.y))
 
-    rng = np.random.default_rng(args.seed)
     os.makedirs(args.out, exist_ok=True)
-    log = open(os.path.join(args.out, "metrics.jsonl"), "w")
-    kr = jax.random.fold_in(key, 2)
     t0 = time.time()
-    for r in range(args.rounds):
-        bx = np.stack([train.x[rng.choice(p, (args.local_steps, args.batch))]
-                       for p in parts])
-        by = np.stack([train.y[rng.choice(p, (args.local_steps, args.batch))]
-                       for p in parts])
-        kr, kround = jax.random.split(kr)
-        state, m = round_fn(state, {"x": jnp.asarray(bx), "y": jnp.asarray(by)},
-                            kround)
-        if (r + 1) % args.eval_every == 0 or r == args.rounds - 1:
-            acc = float(eval_acc(state.params))
-            rec = {"round": r + 1, "loss": float(m.loss), "acc": acc,
-                   "cos": float(jnp.mean(m.cosine)),
-                   "payload_floats": float(m.payload_floats),
+    with open(os.path.join(args.out, "metrics.jsonl"), "w") as log:
+        def on_eval(st, m, r):
+            rec = {"round": r, "loss": float(m.loss[-1]),
+                   "acc": float(eval_acc(st.params)),
+                   "cos": float(np.mean(m.cosine[-1])),
+                   "payload_floats": float(m.payload_floats[-1]),
                    "elapsed_s": round(time.time() - t0, 1)}
             print(json.dumps(rec))
             log.write(json.dumps(rec) + "\n")
             log.flush()
+
+        state, _ = engine.run(state, args.rounds, eval_every=args.eval_every,
+                              eval_fn=on_eval)
     save_checkpoint(os.path.join(args.out, "final"), state.params,
                     meta={"model": args.model, "dataset": args.dataset,
                           "compressor": args.compressor, "rounds": args.rounds})
@@ -119,33 +109,27 @@ def train_lm_smoke(args):
                                  syn_spec=syn_spec_for(cfg, comp),
                                  local_lr=args.lr)
     fl_cfg = FLConfig(num_clients=args.clients, local_steps=args.local_steps,
-                      local_lr=args.lr, compressor=comp)
-    round_fn = jax.jit(make_fl_round(model.loss, compressor, fl_cfg))
+                      local_lr=args.lr, local_batch=args.batch,
+                      compressor=comp, seed=args.seed)
 
     S = 64
     data = make_token_dataset(jax.random.PRNGKey(args.seed), 2048, S,
                               cfg.vocab_size)
-    state = fl_init(params, args.clients)
-    rng = np.random.default_rng(args.seed)
-    kr = jax.random.PRNGKey(args.seed + 1)
-    is_encdec = isinstance(model, EncDec)
-    for r in range(args.rounds):
-        idx = rng.integers(0, len(data), (args.clients, args.local_steps, args.batch))
-        batch = {"tokens": jnp.asarray(data[idx])}
-        if is_encdec:
-            batch["frames"] = jnp.zeros(
-                (args.clients, args.local_steps, args.batch,
-                 cfg.num_mm_tokens, cfg.d_model), jnp.float32)
-        elif cfg.num_mm_tokens:
-            batch["prefix_embeds"] = jnp.zeros(
-                (args.clients, args.local_steps, args.batch,
-                 cfg.num_mm_tokens, cfg.d_model), jnp.float32)
-        kr, kround = jax.random.split(kr)
-        state, m = round_fn(state, batch, kround)
-        if (r + 1) % args.eval_every == 0 or r == args.rounds - 1:
-            print(json.dumps({"round": r + 1, "loss": float(m.loss),
-                              "cos": float(jnp.mean(m.cosine)),
-                              "params": d}))
+    extras = {}
+    if isinstance(model, EncDec):
+        extras["frames"] = (cfg.num_mm_tokens, cfg.d_model)
+    elif cfg.num_mm_tokens:
+        extras["prefix_embeds"] = (cfg.num_mm_tokens, cfg.d_model)
+    engine = RoundEngine(
+        make_fl_round(model.loss, compressor, fl_cfg),
+        token_batcher(data, args.clients, args.local_steps, args.batch,
+                      extras=extras),
+        seed=args.seed)
+    state = engine.init_state(params, args.clients)
+    engine.run(state, args.rounds, eval_every=args.eval_every,
+               eval_fn=lambda st, m, r: print(json.dumps(
+                   {"round": r, "loss": float(m.loss[-1]),
+                    "cos": float(np.mean(m.cosine[-1])), "params": d})))
 
 
 def main():

@@ -254,6 +254,14 @@ FMNIST_SPEC = VisionSpec("fmnist", (28, 28, 1), 10)
 CIFAR10_SPEC = VisionSpec("cifar10", (32, 32, 3), 10)
 CIFAR100_SPEC = VisionSpec("cifar100", (32, 32, 3), 100)
 
+DATASETS = {
+    "mnist": MNIST_SPEC,
+    "emnist": EMNIST_SPEC,
+    "fmnist": FMNIST_SPEC,
+    "cifar10": CIFAR10_SPEC,
+    "cifar100": CIFAR100_SPEC,
+}
+
 
 def make_paper_model(name: str, spec: VisionSpec) -> VisionModel:
     return {
