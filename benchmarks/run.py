@@ -14,9 +14,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_fedsynth, bench_fig1, bench_fig7, bench_kernels,
-                        bench_round_engine, bench_ssweep, bench_table2,
-                        bench_table3, bench_table4)
+from benchmarks import (bench_collectives, bench_fedsynth, bench_fig1,
+                        bench_fig7, bench_kernels, bench_round_engine,
+                        bench_ssweep, bench_table2, bench_table3, bench_table4)
 
 BENCHES = {
     "fig1": bench_fig1.run,          # convergence vs rate
@@ -28,6 +28,7 @@ BENCHES = {
     "ssweep": bench_ssweep.run,      # encoder-iteration knob (Algorithm 1 S)
     "kernels": bench_kernels.run,    # fused-kernel pass accounting
     "round_engine": bench_round_engine.run,  # scanned engine vs python loop
+    "collectives": bench_collectives.run,    # sharded fan-out wire bytes
 }
 
 

@@ -7,6 +7,11 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
 * ``BENCH_kernels.json``: any increase in HBM passes per 3SFC objective
   evaluation (``encoder_fused_kernel_passes``, the BlockSpec contract
   number — immune to CPU noise), or the single-pass gate flipping false.
+* ``BENCH_collectives.json``: any increase in the fused path's per-round
+  collective bytes, any drop in the naive/fused wire-bytes ratio beyond
+  1% (HLO byte totals are compile-deterministic; the slack only absorbs
+  jax-version drift), any collective appearing inside the per-client
+  encode region, or any ``pass_*`` gate flipping false.
 * ``BENCH_round_engine.json``: >5% drop in the engine's driver-path
   rounds/sec relative to the same run's python-loop baseline (the
   ``driver.speedup`` ratio — absolute rounds/sec swings 2x+ with load on
@@ -105,9 +110,35 @@ def check_round_engine(fresh, base, tol):
     return probs
 
 
+def check_collectives(fresh, base, tol):
+    probs = []
+    f_b = _get(fresh, "fused.collective_bytes_per_round")
+    b_b = _get(base, "fused.collective_bytes_per_round")
+    if f_b is not None and b_b is not None and f_b > 1.01 * b_b:
+        probs.append(f"fused-decode per-round collective bytes increased: "
+                     f"{b_b:.0f} -> {f_b:.0f}")
+    f_r, b_r = _get(fresh, "wire_ratio"), _get(base, "wire_ratio")
+    if f_r is not None and b_r is not None and f_r < 0.99 * b_r:
+        probs.append(f"naive/fused wire-bytes ratio dropped: "
+                     f"{b_r:.0f}x -> {f_r:.0f}x")
+    for path in ("naive.encode_region_collectives",
+                 "fused.encode_region_collectives"):
+        v = _get(fresh, path)
+        if v:
+            probs.append(f"{path}: {v} collective(s) inside the per-client "
+                         f"encode region (must be 0)")
+    for gate in ("pass", "pass_wire_ratio", "pass_payload_scaling",
+                 "pass_encode_region_clean", "pass_bitexact",
+                 "pass_threesfc_tol"):
+        if _get(base, gate) and not _get(fresh, gate):
+            probs.append(f"{gate} gate flipped to false")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
+    "BENCH_collectives.json": check_collectives,
 }
 
 

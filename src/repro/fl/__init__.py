@@ -4,3 +4,4 @@ from repro.fl.round import FLState, fl_init, fl_round, make_fl_round
 from repro.fl.budget import matched_compressors, payload_budget
 from repro.fl.engine import (ClientPools, EngineStats, RoundEngine,
                              device_pools, token_batcher, vision_batcher)
+from repro.fl.sharding import FLShardings, make_fl_shardings

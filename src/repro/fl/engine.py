@@ -54,6 +54,31 @@ buffers — a donated ``FLState`` must never be touched after the dispatch.
 ``RoundEngine.init_state`` therefore deep-copies the params it is given
 (the caller's model params survive the first donation), and every ``run*``
 method returns the fresh state that replaces the consumed one.
+
+Mesh placement contract
+-----------------------
+Pass ``shardings=make_fl_shardings(mesh)`` (see ``repro.fl.sharding``) to
+run the engine on an explicit mesh. The contract, enforced end to end:
+
+* ``init_state`` places the state before the first dispatch: params and the
+  round counter replicated, the N×d EF residual tree sharded leading-axis
+  over ``client_axes(mesh)`` — each device owns its clients' residuals.
+* every scanned block is jitted with ``in_shardings``/``out_shardings`` set
+  to that same ``FLState`` prefix tree, so (a) donation reuses the *sharded*
+  buffers in place (the EF tree is never re-laid-out across a dispatch) and
+  (b) the carried state can never silently gather to one device — the
+  output sharding is pinned, not inferred.
+* the per-round batch tree gathered by ``batch_fn`` is pinned to the client
+  sharding inside the jit (``constrain_client_tree``) so GSPMD feeds each
+  device exactly its clients' batches.
+* block metrics are pinned replicated — they are O(N) scalars per round and
+  the host fetch at the block boundary reads them without a device gather.
+
+The round function must use the matching fan-out
+(``make_fl_round(..., client_parallel='shard_map', mesh=mesh)``) for the
+per-client region to stay collective-free; the vmap fan-out also runs
+under these shardings (GSPMD partitions it) and is the bit-exactness
+oracle (tests/test_shard_round.py).
 """
 from __future__ import annotations
 
@@ -86,12 +111,20 @@ class ClientPools(NamedTuple):
 
 def device_pools(parts: Sequence[np.ndarray]) -> ClientPools:
     """Materialize a host-side partition (list of ragged index arrays, as
-    produced by ``data.partition.dirichlet_partition``) as device pools."""
-    cap = max(len(p) for p in parts)
+    produced by ``data.partition.dirichlet_partition``) as device pools.
+
+    Zero-sample clients (an empty Dirichlet part — alpha small, N large)
+    get ``size`` clamped to 1 over their all-zeros index row, i.e. they
+    resample dataset row 0 every step: ``randint(maxval=0)`` is undefined
+    (it silently returns garbage inside jit), so the clamp turns a
+    degenerate part into a documented convention instead of corrupt
+    sampling. Callers that want to exclude such clients outright should
+    filter the partition before building pools."""
+    cap = max(max(len(p) for p in parts), 1)
     index = np.zeros((len(parts), cap), np.int32)
     for i, p in enumerate(parts):
         index[i, : len(p)] = np.asarray(p, np.int32)
-    size = np.array([len(p) for p in parts], np.int32)
+    size = np.array([max(len(p), 1) for p in parts], np.int32)
     return ClientPools(jnp.asarray(index), jnp.asarray(size))
 
 
@@ -175,13 +208,17 @@ class RoundEngine:
     """
 
     def __init__(self, round_fn: RoundFn, batch_fn: BatchFn, *, seed: int = 0,
-                 donate: bool = True):
+                 donate: bool = True, shardings=None):
         base = jax.random.PRNGKey(seed)
         self._data_key = jax.random.fold_in(base, _DATA_FOLD)
         self._round_key = jax.random.fold_in(base, _ROUND_FOLD)
         self._round_fn = round_fn
         self._batch_fn = batch_fn
         self.donate = donate
+        # repro.fl.sharding.FLShardings | None — the mesh placement contract
+        # (see module docstring); imported structurally to keep this module
+        # importable without touching jax device state.
+        self.shardings = shardings
         self._blocks: Dict[int, Callable] = {}
         self._loop_step = None
         self.stats = EngineStats()
@@ -189,13 +226,20 @@ class RoundEngine:
     # -- state ------------------------------------------------------------
     def init_state(self, params: PyTree, num_clients: int) -> FLState:
         """``fl_init`` on a deep copy of ``params`` so donation of the
-        engine state can never consume the caller's model tree."""
+        engine state can never consume the caller's model tree. With a
+        placement contract installed, the fresh state is placed on the mesh
+        (params replicated, EF client-sharded) before the first dispatch."""
         owned = jax.tree_util.tree_map(jnp.copy, params)
-        return fl_init(owned, num_clients)
+        state = fl_init(owned, num_clients)
+        if self.shardings is not None:
+            state = self.shardings.place_state(state)
+        return state
 
     # -- the round body (shared by scan and reference loop) ----------------
     def _round(self, state: FLState) -> Tuple[FLState, RoundMetrics]:
         batches = self._batch_fn(self._data_key, state.round)
+        if self.shardings is not None:
+            batches = self.shardings.constrain_client_tree(batches)
         key = jax.random.fold_in(self._round_key, state.round)
         return self._round_fn(state, batches, key)
 
@@ -205,7 +249,18 @@ class RoundEngine:
             def blk(state):
                 return jax.lax.scan(lambda s, _: self._round(s), state, None,
                                     length=length)
-            fn = jax.jit(blk, donate_argnums=(0,) if self.donate else ())
+            donate = (0,) if self.donate else ()
+            if self.shardings is None:
+                fn = jax.jit(blk, donate_argnums=donate)
+            else:
+                # pin input AND output state to the contract: donation then
+                # reuses the sharded buffers in place, and the scanned EF
+                # carry can never silently gather to one device.
+                fn = jax.jit(
+                    blk, donate_argnums=donate,
+                    in_shardings=(self.shardings.state,),
+                    out_shardings=(self.shardings.state,
+                                   self.shardings.replicated))
             self._blocks[length] = fn
         return fn
 

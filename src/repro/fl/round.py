@@ -3,8 +3,7 @@
 ``make_fl_round(loss_fn, compressor, fl_cfg)`` closes over the model loss and
 the compressor and returns ``fl_round(state, client_batches, key)``:
 
-  1. every client runs K local SGD steps (vmapped over the client axis —
-     on the production mesh the client axis is sharded over ('pod','data')),
+  1. every client runs K local SGD steps (mapped over the client axis),
   2. each client EF-compresses its accumulated update (3SFC encode / top-k /
      sign / ... — per-client, no cross-client collectives),
   3. the server aggregates reconstructions and updates the global model
@@ -12,15 +11,42 @@ the compressor and returns ``fl_round(state, client_batches, key)``:
      the server's decoder produces from (D_syn, s) — the exactness is a
      tested property (tests/test_threesfc.py::test_decode_matches_encoder).
 
+Client fan-out (``client_parallel``)
+------------------------------------
+* ``'vmap'`` (default): the client axis is a plain vmap — single-device
+  reference semantics, and the bit-exactness oracle for the sharded path.
+* ``'shard_map'`` (requires ``mesh``): each device runs its *local* clients'
+  ``local_train`` + encode under ``jax.shard_map`` over ``client_axes(mesh)``
+  with ZERO cross-client collectives in the per-client region (gated from
+  the compiled HLO by ``benchmarks/bench_collectives.py`` via the
+  ``CLIENT_SCOPE`` named scope). Only the shard_map *boundary* communicates:
+
+  - default path: one tiled ``all_gather`` of the per-client reconstructions
+    (the O(d)-per-device full-gradient collective — FedAvg's wire bill),
+    then the server aggregate/update runs replicated with bitwise the same
+    reduction order as the vmap oracle. An ``all_gather``-then-reduce is
+    deliberately used instead of ``psum``: the CPU/TPU all-reduce combiner
+    order differs from a single-device axis reduction (measured ~1e-5 on 8
+    hosts), which would break the shard_map ≡ vmap oracle contract that
+    keeps this refactor testable. Per the HLO byte accounting both forms
+    move the same O(d) operand bytes per device — this is a collective-order
+    choice, not a bandwidth concession.
+  - fused 3SFC path: the ``all_gather`` carries ONLY the tiny ``(D_syn, s)``
+    payload trees (= the paper's compressed uplink, as on-mesh wire bytes),
+    and the single batched server backward runs replicated. The O(d)
+    collective disappears entirely.
+
 Metrics returned per round: mean local loss, per-client cosine compression
 efficiency (paper Fig. 7), payload floats (paper Eq. 1 accounting).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FLConfig
 from repro.core import flat
@@ -29,6 +55,11 @@ from repro.fl.client import local_train
 from repro.fl.server import aggregate, server_update
 
 PyTree = Any
+
+# Named scope wrapping the per-client local-train + encode region; the
+# collectives benchmark greps compiled-HLO metadata for this name to prove
+# the region stays collective-free (tested in tests/test_hlo_analyzer.py).
+CLIENT_SCOPE = "fl_client_local"
 
 
 class FLState(NamedTuple):
@@ -51,6 +82,27 @@ def fl_init(params: PyTree, num_clients: int) -> FLState:
     return FLState(params, ef, jnp.zeros((), jnp.int32))
 
 
+def _check_fanout(cfg: FLConfig, client_parallel: str,
+                  mesh: Optional[Mesh]) -> Optional[Tuple[str, ...]]:
+    """Validate the (client_parallel, mesh) pair; returns the client axes
+    for the shard_map path (None for vmap). The shard-count/divisibility
+    policy is FLShardings' — one source of truth for the mesh contract
+    (imported lazily: sharding.py imports this module at top level)."""
+    if client_parallel not in ("vmap", "shard_map"):
+        raise ValueError(
+            f"client_parallel must be 'vmap' or 'shard_map', got "
+            f"{client_parallel!r}")
+    if client_parallel == "vmap":
+        return None
+    if mesh is None:
+        raise ValueError("client_parallel='shard_map' requires an explicit "
+                         "mesh (see repro.fl.sharding.make_fl_shardings)")
+    from repro.fl.sharding import make_fl_shardings
+    sh = make_fl_shardings(mesh)
+    sh.check_divisible(cfg.num_clients)
+    return sh.axes
+
+
 def make_fl_round(
     loss_fn: Callable[[PyTree, Dict], jax.Array],
     compressor: TreeCompressor,
@@ -60,13 +112,15 @@ def make_fl_round(
     fused_decode: bool = False,
     syn_loss_fn: Callable = None,
     syn_spec=None,
+    client_parallel: str = "vmap",
+    mesh: Optional[Mesh] = None,
 ) -> Callable[[FLState, PyTree, jax.Array], Tuple[FLState, RoundMetrics]]:
     """``fused_decode`` (3SFC only, §Perf beyond-paper optimization):
 
     The naive server path decodes per client (each recon is a FULL
-    param-sized tree) and averages over the sharded client axis — an
-    all-reduce of d floats, identical to FedAvg's collective bill. But since
-    every ĝ_i is evaluated at the same w^t (Eq. 10),
+    param-sized tree) and gathers it over the sharded client axis — an O(d)
+    per-device collective, identical to FedAvg's bill. But since every ĝ_i
+    is evaluated at the same w^t (Eq. 10),
 
         G(ĝ_1..ĝ_N) = ∇_w (1/N) Σ_i s_i F(D_syn,i, w^t),
 
@@ -74,7 +128,13 @@ def make_fl_round(
     client axis (= the paper's compressed uplink, as wire bytes) and run ONE
     replicated batched backward. The full-gradient collective disappears;
     EF stays exact because each client computes its own recon locally.
+
+    ``client_parallel='shard_map'`` + ``mesh`` turns either path into the
+    explicitly sharded fan-out (see module docstring); ``mesh`` alone (with
+    the default vmap fan-out) pins the fused path's replication constraint
+    to that mesh instead of relying on an ambient mesh context.
     """
+    axes = _check_fanout(cfg, client_parallel, mesh)
 
     def one_client(global_params, ef_i, batches_i, key_i):
         g, loss = local_train(loss_fn, global_params, batches_i,
@@ -82,12 +142,11 @@ def make_fl_round(
         recon, ef_new, metrics = compressor.step(key_i, g, ef_i, global_params)
         return recon, ef_new, loss, metrics
 
-    def fl_round(state: FLState, client_batches: PyTree, key: jax.Array,
-                 weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        recons, ef_new, losses, metrics = jax.vmap(
-            one_client, in_axes=(None, 0, 0, 0))(
-            state.params, state.ef, client_batches, keys)
+    def _server_step(state: FLState, recons, ef_new, losses, metrics,
+                     weights) -> Tuple[FLState, RoundMetrics]:
+        """Shared server half: aggregate + update + metrics packaging.
+        Inputs are full (N, ...) arrays in client order on both fan-out
+        paths, so the reduction order — hence the result — is identical."""
         agg = aggregate(recons, weights)
         new_params = server_update(state.params, agg, cfg.server_lr)
         ef_new = jax.tree_util.tree_map(
@@ -100,12 +159,44 @@ def make_fl_round(
         )
         return FLState(new_params, ef_new, state.round + 1), rm
 
+    def fl_round(state: FLState, client_batches: PyTree, key: jax.Array,
+                 weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        recons, ef_new, losses, metrics = jax.vmap(
+            one_client, in_axes=(None, 0, 0, 0))(
+            state.params, state.ef, client_batches, keys)
+        return _server_step(state, recons, ef_new, losses, metrics, weights)
+
+    def fl_round_shard(state: FLState, client_batches: PyTree, key: jax.Array,
+                       weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+
+        def body(global_params, ef, batches, keys_):
+            # per-client region: local clients only, NO collectives (gated)
+            with jax.named_scope(CLIENT_SCOPE):
+                recons, ef_new, losses, metrics = jax.vmap(
+                    one_client, in_axes=(None, 0, 0, 0))(
+                    global_params, ef, batches, keys_)
+            # the wire: one tiled gather per tree reassembles client order
+            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
+            recons = jax.tree_util.tree_map(gather, recons)
+            losses = gather(losses)
+            metrics = type(metrics)(*(gather(m) for m in metrics))
+            return recons, ef_new, losses, metrics
+
+        recons, ef_new, losses, metrics = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axes), P(axes), P(axes)),
+            out_specs=(P(), P(axes), P(), P()),
+            check_rep=False,
+        )(state.params, state.ef, client_batches, keys)
+        return _server_step(state, recons, ef_new, losses, metrics, weights)
+
     if not fused_decode:
-        return fl_round
+        return fl_round if axes is None else fl_round_shard
 
     assert syn_loss_fn is not None and syn_spec is not None, \
         "fused_decode needs the 3SFC syn_loss_fn + syn_spec"
-    from jax.sharding import PartitionSpec as P
     from repro.core import threesfc
     from repro.kernels import ops
 
@@ -127,22 +218,16 @@ def make_fl_round(
         return res.syn, res.s, ef_new, loss, res.cosine
 
     def _replicate(x):
-        try:
-            return jax.lax.with_sharding_constraint(
-                x, P(*([None] * x.ndim)))
-        except Exception:                      # no mesh context (tests)
+        # Explicit mesh plumbing: with no mesh the constraint is a no-op by
+        # construction (single-process tests); with one, the payloads are
+        # pinned replicated so the batched backward runs on every device.
+        if mesh is None:
             return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
 
-    def fl_round_fused(state: FLState, client_batches: PyTree,
-                       key: jax.Array, weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        syns, ss, ef_new, losses, cosines = jax.vmap(
-            one_client_fused, in_axes=(None, 0, 0, 0))(
-            state.params, state.ef, client_batches, keys)
-        # the wire: all-gather ONLY the payloads (tiny) -> replicated
-        syns = jax.tree_util.tree_map(_replicate, syns)
-        ss = _replicate(ss)
-
+    def _fused_server_step(state, syns, ss, ef_new, losses, cosines):
+        """Shared fused server half: ONE replicated batched backward over
+        the gathered (D_syn, s) payloads (identical on both fan-out paths)."""
         def total_loss(w):
             per = jax.vmap(lambda sy: syn_loss_fn(w, sy))(syns)   # (N,)
             return jnp.mean(jax.lax.stop_gradient(ss) * per)
@@ -160,7 +245,41 @@ def make_fl_round(
         )
         return FLState(new_params, ef_new, state.round + 1), rm
 
-    return fl_round_fused
+    def fl_round_fused(state: FLState, client_batches: PyTree,
+                       key: jax.Array, weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        syns, ss, ef_new, losses, cosines = jax.vmap(
+            one_client_fused, in_axes=(None, 0, 0, 0))(
+            state.params, state.ef, client_batches, keys)
+        # the wire: the payloads are tiny -> replicated
+        syns = jax.tree_util.tree_map(_replicate, syns)
+        ss = _replicate(ss)
+        return _fused_server_step(state, syns, ss, ef_new, losses, cosines)
+
+    def fl_round_fused_shard(state: FLState, client_batches: PyTree,
+                             key: jax.Array, weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+
+        def body(global_params, ef, batches, keys_):
+            with jax.named_scope(CLIENT_SCOPE):
+                syns, ss, ef_new, losses, cosines = jax.vmap(
+                    one_client_fused, in_axes=(None, 0, 0, 0))(
+                    global_params, ef, batches, keys_)
+            # the wire: all-gather ONLY the (D_syn, s) payloads — O(N·payload)
+            # bytes, never the O(d) reconstruction trees
+            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
+            syns = jax.tree_util.tree_map(gather, syns)
+            return syns, gather(ss), ef_new, gather(losses), gather(cosines)
+
+        syns, ss, ef_new, losses, cosines = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axes), P(axes), P(axes)),
+            out_specs=(P(), P(), P(axes), P(), P()),
+            check_rep=False,
+        )(state.params, state.ef, client_batches, keys)
+        return _fused_server_step(state, syns, ss, ef_new, losses, cosines)
+
+    return fl_round_fused if axes is None else fl_round_fused_shard
 
 
 # convenience alias used in docs/examples

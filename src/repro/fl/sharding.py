@@ -1,0 +1,109 @@
+"""Mesh placement for the FL round: where every FLState byte lives.
+
+``make_fl_shardings(mesh)`` derives the one placement contract the round
+engine, the round functions, and the launch drivers all share:
+
+* ``params`` — replicated (``P()``): every device holds the global model
+  w^t, so the per-client local-SGD/encode region needs no collective to
+  read it and the server update runs replicated (identical on every
+  device, no broadcast).
+* ``client`` — leading axis sharded over ``client_axes(mesh)``: the
+  dominant N×d EF residual tree, the ``ClientPools`` index/size arrays,
+  the per-round ``(N, K, B, ...)`` batch trees, and the per-client PRNG
+  keys all carry the client dimension first, so ONE leading-axis spec
+  places all of them. Each device owns ``N / n_client_shards`` clients
+  end to end — EF residuals never leave the device that updates them.
+* ``scalar``/``replicated`` — ``P()`` for the round counter and metrics.
+
+The specs are *prefix* pytrees in the jax sense: a single ``NamedSharding``
+leaf applies to every array in the corresponding subtree, which is what
+``jax.jit(in_shardings=...)``, ``shard_map`` specs, and the ``place_*``
+helpers below all consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.fl.round import FLState
+from repro.launch.mesh import client_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FLShardings:
+    """NamedShardings for one mesh, derived once and threaded everywhere.
+
+    ``state`` is an ``FLState``-shaped prefix tree (params replicated, EF
+    client-sharded, round counter replicated) — pass it directly as
+    ``jit``'s ``in_shardings``/``out_shardings`` entry for the state
+    argument so donation reuses the *sharded* buffers in place.
+    """
+
+    mesh: Mesh
+    axes: Tuple[str, ...]            # mesh axes carrying the client dim
+    replicated: NamedSharding        # P(): params, metrics, scalars
+    client: NamedSharding            # P(axes): leading-axis client sharding
+    state: FLState                   # prefix tree for a whole FLState
+
+    @property
+    def client_shards(self) -> int:
+        """How many ways the client axis is split (mesh axis size product)."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        n = 1
+        for a in self.axes:
+            n *= sizes[a]
+        return n
+
+    # ---- placement -------------------------------------------------------
+    def place_state(self, state: FLState) -> FLState:
+        """Explicitly place an FLState: params/round replicated, EF sharded
+        on the client axis. Requires ``N % client_shards == 0``."""
+        self.check_divisible(jax.tree_util.tree_leaves(state.ef)[0].shape[0])
+        return FLState(
+            params=jax.device_put(state.params, self.replicated),
+            ef=jax.device_put(state.ef, self.client),
+            round=jax.device_put(state.round, self.replicated),
+        )
+
+    def place_client_tree(self, tree: PyTree) -> PyTree:
+        """Place any leading-axis-N pytree (ClientPools, stacked batches,
+        per-client keys) shard-per-device on the client axis."""
+        self.check_divisible(jax.tree_util.tree_leaves(tree)[0].shape[0])
+        return jax.device_put(tree, self.client)
+
+    # alias matching the ClientPools use site by name
+    place_pools = place_client_tree
+
+    def constrain_client_tree(self, tree: PyTree) -> PyTree:
+        """In-jit version of ``place_client_tree``: pin a traced batch tree
+        to the client sharding so GSPMD never round-trips it through one
+        device between the gather and the shard_map fan-out."""
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, self.client), tree)
+
+    def check_divisible(self, num_clients: int) -> None:
+        if num_clients % self.client_shards != 0:
+            raise ValueError(
+                f"num_clients={num_clients} is not divisible by the mesh's "
+                f"{self.client_shards} client shard(s) (axes {self.axes} of "
+                f"mesh {dict(zip(self.mesh.axis_names, self.mesh.devices.shape))}); "
+                f"pad or regroup clients so each device owns a whole slice")
+
+
+def make_fl_shardings(mesh: Mesh) -> FLShardings:
+    """Derive the FL placement contract from a mesh (see module docstring)."""
+    axes = client_axes(mesh)
+    replicated = NamedSharding(mesh, P())
+    client = NamedSharding(mesh, P(axes))
+    return FLShardings(
+        mesh=mesh,
+        axes=axes,
+        replicated=replicated,
+        client=client,
+        state=FLState(params=replicated, ef=client, round=replicated),
+    )

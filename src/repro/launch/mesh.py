@@ -19,6 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"make_host_mesh: {n} device(s) cannot be split into a "
+            f"(data={n}//{model}, model={model}) mesh — n % model must be 0 "
+            f"(a truncated mesh would silently drop devices)")
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

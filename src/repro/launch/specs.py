@@ -172,12 +172,15 @@ def _batch_specs(cfg: ModelConfig, mesh, shapes: Dict[str, Tuple], dtypes) -> Di
 def make_train_entry(cfg: ModelConfig, shape: ShapeConfig, mesh,
                      fl: Optional[FLConfig] = None, *,
                      fused_decode: bool = False,
-                     ef_dtype=jnp.float32):
+                     ef_dtype=jnp.float32,
+                     client_parallel: str = "vmap"):
     """fl_round over clients = pod*data. Returns (fn, args_pytree).
 
     §Perf variants: ``fused_decode`` swaps the full-gradient client-axis
     all-reduce for an all-gather of the tiny 3SFC payloads (fl/round.py);
-    ``ef_dtype`` stores the per-client EF residual in reduced precision.
+    ``ef_dtype`` stores the per-client EF residual in reduced precision;
+    ``client_parallel='shard_map'`` lowers the explicitly sharded client
+    fan-out instead of the GSPMD-partitioned vmap.
     """
     num_clients = mesh_lib.num_clients_for(mesh)
     caxes = mesh_lib.client_axes(mesh)
@@ -198,7 +201,8 @@ def make_train_entry(cfg: ModelConfig, shape: ShapeConfig, mesh,
         num_micro -= 1
     round_fn = make_fl_round(model.loss, comp, fl, num_micro=num_micro,
                              fused_decode=fused_decode,
-                             syn_loss_fn=syn_loss_fn(model), syn_spec=sspec)
+                             syn_loss_fn=syn_loss_fn(model), syn_spec=sspec,
+                             client_parallel=client_parallel, mesh=mesh)
 
     K, B, S = fl.local_steps, per_client, shape.seq_len
     pspecs = param_specs(model, mesh)
@@ -289,7 +293,8 @@ def make_entry(arch: str, shape_name: str, mesh, fl: Optional[FLConfig] = None,
     """(entry_fn, args) for one (arch x input-shape) pair; None if skipped.
 
     ``variant`` (§Perf knobs): {"fused_decode": bool, "ef_dtype": "bfloat16",
-    "param_dtype": "bfloat16", "act_shard": bool, "local_steps": int}.
+    "param_dtype": "bfloat16", "act_shard": bool, "local_steps": int,
+    "client_parallel": "vmap" | "shard_map"}.
     """
     variant = variant or {}
     shape = INPUT_SHAPES[shape_name]
@@ -315,9 +320,11 @@ def make_entry(arch: str, shape_name: str, mesh, fl: Optional[FLConfig] = None,
                 local_steps=variant["local_steps"])
         ef_dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
             variant.get("ef_dtype", "float32")]
-        return make_train_entry(cfg, shape, mesh, fl2,
-                                fused_decode=variant.get("fused_decode", False),
-                                ef_dtype=ef_dtype)
+        return make_train_entry(
+            cfg, shape, mesh, fl2,
+            fused_decode=variant.get("fused_decode", False),
+            ef_dtype=ef_dtype,
+            client_parallel=variant.get("client_parallel", "vmap"))
     if shape.mode == "prefill":
         return make_prefill_entry(cfg, shape, mesh)
     return make_decode_entry(cfg, shape, mesh)

@@ -39,9 +39,37 @@ from repro.fl.budget import matched_compressors
 from repro.fl.engine import (RoundEngine, device_pools, token_batcher,
                              vision_batcher)
 from repro.fl.round import make_fl_round
+from repro.fl.sharding import make_fl_shardings
+from repro.launch.mesh import make_host_mesh
 from repro.models.build import build_model, syn_loss_fn, syn_spec_for, vision_syn_spec
 from repro.models.cnn import DATASETS, accuracy, make_paper_model
 from repro.models.encdec import EncDec
+
+
+def make_fanout(args):
+    """(client_parallel, mesh, shardings) from --client-parallel.
+
+    'auto' picks the sharded fan-out when the host has multiple devices and
+    the client count divides evenly over them, else the single-device vmap.
+    Explicit 'shard_map' fails loudly (divisibility / single device) rather
+    than silently degrading.
+    """
+    mode = args.client_parallel
+    n = len(jax.devices())
+    if mode == "auto":
+        mode = "shard_map" if n > 1 and args.clients % n == 0 else "vmap"
+    if mode == "vmap":
+        return "vmap", None, None
+    if n < 2:
+        raise ValueError(
+            "--client-parallel shard_map needs >1 device (a 1-shard "
+            "shard_map would be vmap with extra steps); this host has "
+            f"{n} — use 'vmap'/'auto' or force devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    mesh = make_host_mesh()
+    shardings = make_fl_shardings(mesh)
+    shardings.check_divisible(args.clients)
+    return "shard_map", mesh, shardings
 
 
 def train_vision(args):
@@ -64,11 +92,15 @@ def train_vision(args):
                                     spec.input_shape, spec.num_classes)
     parts = dirichlet_partition(train.y, args.clients, alpha=args.alpha,
                                 seed=args.seed, min_per_client=args.batch)
+    mode, mesh, shardings = make_fanout(args)
+    pools = device_pools(parts)
+    if shardings is not None:
+        pools = shardings.place_pools(pools)
     engine = RoundEngine(
-        make_fl_round(model.loss, compressor, fl_cfg),
-        vision_batcher(train.x, train.y, device_pools(parts),
-                       args.local_steps, args.batch),
-        seed=args.seed)
+        make_fl_round(model.loss, compressor, fl_cfg,
+                      client_parallel=mode, mesh=mesh),
+        vision_batcher(train.x, train.y, pools, args.local_steps, args.batch),
+        seed=args.seed, shardings=shardings)
     state = engine.init_state(params, args.clients)
 
     @jax.jit
@@ -120,11 +152,13 @@ def train_lm_smoke(args):
         extras["frames"] = (cfg.num_mm_tokens, cfg.d_model)
     elif cfg.num_mm_tokens:
         extras["prefix_embeds"] = (cfg.num_mm_tokens, cfg.d_model)
+    mode, mesh, shardings = make_fanout(args)
     engine = RoundEngine(
-        make_fl_round(model.loss, compressor, fl_cfg),
+        make_fl_round(model.loss, compressor, fl_cfg,
+                      client_parallel=mode, mesh=mesh),
         token_batcher(data, args.clients, args.local_steps, args.batch,
                       extras=extras),
-        seed=args.seed)
+        seed=args.seed, shardings=shardings)
     state = engine.init_state(params, args.clients)
     engine.run(state, args.rounds, eval_every=args.eval_every,
                eval_fn=lambda st, m, r: print(json.dumps(
@@ -151,6 +185,10 @@ def main():
     ap.add_argument("--train-size", type=int, default=4000, dest="train_size")
     ap.add_argument("--eval-every", type=int, default=10, dest="eval_every")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--client-parallel", default="auto", dest="client_parallel",
+                    choices=["auto", "vmap", "shard_map"],
+                    help="client fan-out: sharded over the host mesh "
+                         "(shard_map) or single-program vmap")
     ap.add_argument("--out", default="experiments/train_run")
     args = ap.parse_args()
     if args.arch and args.smoke:

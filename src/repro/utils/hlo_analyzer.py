@@ -38,6 +38,13 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# every op whose called computations the cost/collective walks descend into —
+# ONE constant shared by _comp_cost and _collect_collectives so the two
+# accountings always visit the same call graph
+_CALLERS = ("while", "conditional", "call", "map", "reduce", "reduce-window",
+            "scatter", "sort", "all-reduce", "reduce-scatter",
+            "select-and-scatter", "custom-call", "fusion")
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
 _INSTR = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)")
@@ -212,6 +219,19 @@ def _instr_bytes(ins: Instr, comp: Computation) -> float:
     return float(total)
 
 
+def _collective_of(ins: Instr, comp: Computation) -> Optional[Tuple[str, float]]:
+    """(kind, operand bytes) if this instruction is a collective — the ONE
+    detection rule shared by ``_comp_cost`` totals and the per-op
+    ``collectives()`` extraction, so the two accountings cannot drift.
+    ``-start`` counts, its ``-done`` half does not (one transfer)."""
+    base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+    if base not in _COLLECTIVES or ins.op.endswith("-done"):
+        return None
+    b = sum(_bytes_of(comp.types.get(n, ""))
+            for n in _operand_names(ins.line, ins.op))
+    return base, float(b)
+
+
 def _comp_cost(comps: Dict[str, Computation], name: str,
                memo: Dict[str, CostTotals], fused: bool = False) -> CostTotals:
     key = name + ("#f" if fused else "")
@@ -227,19 +247,15 @@ def _comp_cost(comps: Dict[str, Computation], name: str,
             tot.flops += _dot_flops(ins, comp)
         elif ins.op == "convolution":
             tot.flops += _conv_flops(ins, comp)
-        base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
-        if base in _COLLECTIVES and not ins.op.endswith("-done"):
-            b = sum(_bytes_of(comp.types.get(n, ""))
-                    for n in _operand_names(ins.line, ins.op))
-            tot.coll_bytes[base] += float(b)
+        coll = _collective_of(ins, comp)
+        if coll is not None:
+            tot.coll_bytes[coll[0]] += coll[1]
         if not fused:
             tot.bytes += _instr_bytes(ins, comp)
         if ins.op == "fusion":
             for c in ins.called:
                 tot.add(_comp_cost(comps, c, memo, fused=True))
-        elif ins.op in ("while", "conditional", "call", "map", "reduce",
-                        "reduce-window", "scatter", "sort", "all-reduce",
-                        "reduce-scatter", "select-and-scatter", "custom-call"):
+        elif ins.op in _CALLERS:       # fusion handled above (fused=True)
             for c in ins.called:
                 tot.add(_comp_cost(comps, c, memo, fused=fused), mult=ins.trip)
     memo[key] = tot
@@ -252,3 +268,70 @@ def analyze(hlo_text: str) -> CostTotals:
     if entry is None:
         return CostTotals()
     return _comp_cost(comps, entry, {})
+
+
+# ---------------------------------------------------------------------------
+# per-collective extraction (wire-bytes accounting, benchmarks/bench_collectives)
+# ---------------------------------------------------------------------------
+
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclass
+class CollectiveInstr:
+    """One collective op in the optimized HLO, with its loop context.
+
+    ``bytes`` is the per-execution operand footprint (the same accounting
+    ``CostTotals.coll_bytes`` uses); ``trip`` is the product of enclosing
+    ``known_trip_count`` multipliers, so ``bytes * trip`` is the per-module
+    wire bill. ``op_name`` is the jax name-stack metadata — ``named_scope``
+    regions (e.g. the per-client encode region) are identified by substring
+    on it."""
+
+    kind: str
+    bytes: float
+    trip: float
+    op_name: str
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes * self.trip
+
+
+def _collect_collectives(comps: Dict[str, Computation], name: str,
+                         mult: float, out: List[CollectiveInstr],
+                         stack: Tuple[str, ...]) -> None:
+    comp = comps.get(name)
+    if comp is None or name in stack:          # break cycles defensively
+        return
+    stack = stack + (name,)
+    for ins in comp.instrs:
+        coll = _collective_of(ins, comp)
+        if coll is not None:
+            m = _OP_NAME_RE.search(ins.line)
+            out.append(CollectiveInstr(coll[0], coll[1], mult,
+                                       m.group(1) if m else ""))
+        if ins.op in _CALLERS:
+            for c in ins.called:
+                _collect_collectives(comps, c, mult * ins.trip, out, stack)
+
+
+def collectives(hlo_text: str) -> List[CollectiveInstr]:
+    """Every collective reachable from the entry, trip-count annotated."""
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return []
+    out: List[CollectiveInstr] = []
+    _collect_collectives(comps, entry, 1.0, out, ())
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Total per-module collective operand bytes (trip counts applied)."""
+    return sum(c.total_bytes for c in collectives(hlo_text))
+
+
+def collectives_in_scope(hlo_text: str, scope: str) -> List[CollectiveInstr]:
+    """Collectives whose name-stack metadata mentions ``scope`` — the gate
+    for 'the per-client encode region contains zero collectives'."""
+    return [c for c in collectives(hlo_text) if scope in c.op_name]

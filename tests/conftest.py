@@ -1,7 +1,40 @@
 import os
 import sys
 
+import pytest
+
 # tests must see 1 CPU device (the 512-device flag is dryrun-only)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+sys.path.insert(0, REPO)  # benchmarks/
+
+from benchmarks.bench_collectives import multidev_env  # noqa: E402
+
+
+def run_multidev(args, timeout=1200):
+    """Run ``python <args...>`` in a child process that sees 8 host CPU
+    devices. The device count is locked at first jax init, so multi-device
+    sharding tests cannot run in the (single-device) pytest process itself —
+    they run their scenario in a subprocess and assert on its exit status.
+    The environment recipe is shared with benchmarks/bench_collectives.
+    """
+    import subprocess
+    return subprocess.run([sys.executable] + list(args), env=multidev_env(),
+                          cwd=REPO, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+@pytest.fixture(scope="session")
+def multidev_scenario():
+    """Session fixture running one tests/test_shard_round.py child scenario
+    on 8 forced host devices and asserting it exits clean."""
+
+    def run_scenario(scenario, timeout=1200):
+        p = run_multidev(["tests/test_shard_round.py", scenario], timeout)
+        assert p.returncode == 0, (
+            f"scenario {scenario!r} failed (exit {p.returncode})\n"
+            f"--- stdout ---\n{p.stdout}\n--- stderr ---\n{p.stderr}")
+
+    return run_scenario

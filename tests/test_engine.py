@@ -204,6 +204,31 @@ def test_device_pools_padding_never_sampled():
         np.testing.assert_array_equal(np.asarray(batch["y"]), y[rows])
 
 
+def test_device_pools_zero_sample_client_clamped():
+    """An empty Dirichlet part must not reach randint(maxval=0) (undefined
+    inside jit): device_pools clamps its size to 1 over the zero index row,
+    i.e. the degenerate client deterministically resamples dataset row 0."""
+    n = 60
+    x = np.broadcast_to(np.arange(n, dtype=np.float32).reshape(n, 1, 1, 1),
+                        (n, 2, 2, 1)).copy()
+    y = (np.arange(n) % 10).astype(np.int32)
+    parts = [np.arange(20), np.array([], dtype=np.int64), np.arange(20, 60)]
+    pools = device_pools(parts)
+    assert pools.size.tolist() == [20, 1, 40]
+    assert int(pools.index[1].sum()) == 0
+
+    bf = vision_batcher(x, y, pools, local_steps=2, local_batch=4)
+    batch = bf(jax.random.PRNGKey(0), jnp.int32(0))
+    rows = np.asarray(batch["x"])[..., 0, 0, 0].astype(np.int64)
+    np.testing.assert_array_equal(rows[1], np.zeros((2, 4)))   # all row 0
+    assert np.isin(rows[0], parts[0]).all()
+    assert np.isin(rows[2], parts[2]).all()
+
+    # all-empty partition: still a valid (clamped) pool, no zero-width array
+    pools2 = device_pools([np.array([], dtype=np.int64)] * 2)
+    assert pools2.index.shape == (2, 1) and pools2.size.tolist() == [1, 1]
+
+
 def test_benchmarks_run_only_badname_exits_2(capsys):
     from benchmarks import run as bench_run
     with pytest.raises(SystemExit) as e:

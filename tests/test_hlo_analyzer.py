@@ -89,3 +89,39 @@ ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
 """
     tot = H.analyze(hlo)
     assert tot.coll_bytes["all-reduce"] == 4 * 64 * 128 * 4
+
+
+def test_collective_extraction_with_scope_and_trip():
+    """collectives(): per-op records carry operand bytes, enclosing trip
+    multipliers, and the name-stack metadata used to gate the per-client
+    encode region collective-free."""
+    hlo = """
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ag = f32[64,16]{1,0} all-gather(%p0), dimensions={0}, metadata={op_name="jit(f)/shmap_body/all_gather"}
+  %t = (s32[], f32[8,16]) tuple(%c, %p0)
+  %w = (s32[], f32[8,16]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+%body (a: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %a = (s32[], f32[8,16]) parameter(0)
+  %g = f32[8,16]{1,0} get-tuple-element(%a), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%g), to_apply=%sum, metadata={op_name="jit(f)/fl_client_local/bad_collective"}
+  ROOT %r = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+%cond (a: (s32[], f32[8,16])) -> pred[] {
+  %a2 = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] compare(%x, %y), direction=LT
+}
+"""
+    cols = H.collectives(hlo)
+    assert sorted(c.kind for c in cols) == ["all-gather", "all-reduce"]
+    ag = next(c for c in cols if c.kind == "all-gather")
+    ar = next(c for c in cols if c.kind == "all-reduce")
+    assert ag.bytes == 8 * 16 * 4 and ag.trip == 1
+    assert ar.bytes == 8 * 16 * 4 and ar.trip == 3       # while-body multiplier
+    assert ar.total_bytes == 3 * 8 * 16 * 4
+    assert H.collective_bytes(hlo) == ag.total_bytes + ar.total_bytes
+    scoped = H.collectives_in_scope(hlo, "fl_client_local")
+    assert [c.kind for c in scoped] == ["all-reduce"]
+    assert H.collectives_in_scope(hlo, "nonexistent_scope") == []

@@ -1,0 +1,272 @@
+"""Sharded client fan-out: shard_map rounds must match the vmap oracle and
+the EF placement contract must survive donation.
+
+The scenarios need 8 devices, so each test runs its scenario in a child
+process via the ``multidev_scenario`` conftest fixture (the pytest process
+itself is pinned to 1 CPU device). Child scenarios live in this same file
+under ``__main__`` — run one by hand with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python tests/test_shard_round.py bitexact
+
+Exactness contract (measured, see bench_collectives): XLA CPU lowers
+batched dots differently per vmap width (~1e-8 param drift), so compressors
+whose per-client math differentiates the model (3SFC) are bitwise only on a
+width-matched mesh (client axis 1); fedavg/dgc/signsgd/stc are bitwise on
+the real 8-way client axis.
+"""
+def test_shard_map_bitexact_vs_vmap_all_compressors(multidev_scenario):
+    """3 scanned rounds on the 8-way client mesh: bitwise params/EF/metrics
+    for the width-stable compressors; 3SFC bitwise width-matched + tight
+    allclose on the 8-way mesh."""
+    multidev_scenario("bitexact")
+
+
+def test_ef_sharding_roundtrip_through_donation(multidev_scenario):
+    """Donated scan blocks must consume and reproduce the *sharded* EF
+    buffers: spec pinned across blocks, old state consumed, caller's params
+    alive."""
+    multidev_scenario("ef_donation")
+
+
+# ---------------------------------------------------------------------------
+# child scenarios (8 devices)
+# ---------------------------------------------------------------------------
+
+
+def _world():
+    import jax
+
+    from repro.configs.base import CompressorConfig, FLConfig
+    from repro.core.compressor import make_compressor
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_class_image_dataset
+    from repro.fl.engine import RoundEngine, device_pools, vision_batcher
+    from repro.fl.round import make_fl_round
+    from repro.models.build import vision_syn_spec
+    from repro.models.cnn import MNIST_SPEC, make_paper_model
+
+    N, K, B = 8, 2, 8
+    model = make_paper_model("mlp", MNIST_SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    train = make_class_image_dataset(jax.random.PRNGKey(1), 400,
+                                     MNIST_SPEC.input_shape, 10)
+    parts = dirichlet_partition(train.y, N, alpha=0.5, seed=0,
+                                min_per_client=16)
+
+    def engine(ccfg, shardings=None, mode="vmap", mesh=None, donate=True):
+        spec = vision_syn_spec(MNIST_SPEC, ccfg)
+        comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                               local_lr=0.05)
+        cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                       local_batch=B, compressor=ccfg)
+        pools = device_pools(parts)
+        if shardings is not None:
+            pools = shardings.place_pools(pools)
+        eng = RoundEngine(
+            make_fl_round(model.loss, comp, cfg, client_parallel=mode,
+                          mesh=mesh),
+            vision_batcher(train.x, train.y, pools, K, B),
+            seed=0, donate=donate, shardings=shardings)
+        return eng, eng.init_state(params, N)
+
+    return params, engine, CompressorConfig
+
+
+def _tree_equal(a, b, what):
+    import jax
+    import numpy as np
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{what} not bit-exact")
+
+
+def scenario_bitexact():
+    import jax
+    import numpy as np
+
+    from repro.fl.sharding import make_fl_shardings
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    sh = make_fl_shardings(mesh)
+    mesh_w = jax.make_mesh((1, 8), ("data", "model"))   # width-matched
+    sh_w = make_fl_shardings(mesh_w)
+    _, engine, CompressorConfig = _world()
+
+    kinds = {
+        "fedavg": CompressorConfig(kind="identity", error_feedback=False),
+        "dgc": CompressorConfig(kind="topk", keep_ratio=0.05),
+        "signsgd": CompressorConfig(kind="signsgd"),
+        "stc": CompressorConfig(kind="stc", keep_ratio=0.05),
+        "threesfc": CompressorConfig(kind="threesfc", syn_steps=2, syn_lr=0.1),
+    }
+    for name, ccfg in kinds.items():
+        ev, stv = engine(ccfg)
+        sv, mv = ev.run_block(stv, 3)
+        es, sts = engine(ccfg, sh, "shard_map", mesh)
+        ss, ms = es.run_block(sts, 3)
+        if name == "threesfc":
+            # width-matched mesh: bitwise, proving the shard_map plumbing
+            # (specs, gathers, key contract) is exactly transparent
+            ew, stw = engine(ccfg, sh_w, "shard_map", mesh_w)
+            sw, _ = ew.run_block(stw, 3)
+            _tree_equal(sv.params, sw.params, "threesfc width-matched params")
+            _tree_equal(sv.ef, sw.ef, "threesfc width-matched ef")
+            # 8-way mesh: pinned to tight tolerance (width-dependent XLA
+            # batched-dot lowering, ~1e-8 observed)
+            for a, b in zip(jax.tree_util.tree_leaves(sv.params),
+                            jax.tree_util.tree_leaves(ss.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=0, atol=1e-5)
+        else:
+            _tree_equal(sv.params, ss.params, f"{name} params")
+            _tree_equal(sv.ef, ss.ef, f"{name} ef")
+            for f in mv._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(mv, f)), np.asarray(getattr(ms, f)),
+                    err_msg=f"{name} metric {f} not bit-exact")
+        print(f"ok {name}")
+
+    # fused 3SFC fan-out: gathered (D_syn, s) + replicated backward must
+    # match the vmap fused path to the same width tolerance
+    from repro.configs.base import FLConfig
+    from repro.core.compressor import make_compressor
+    from repro.fl.round import make_fl_round
+    from repro.models.build import vision_syn_spec
+    from repro.models.cnn import MNIST_SPEC, make_paper_model
+    ccfg = kinds["threesfc"]
+    model = make_paper_model("mlp", MNIST_SPEC)
+    spec = vision_syn_spec(MNIST_SPEC, ccfg)
+    comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                           local_lr=0.05)
+    cfg = FLConfig(num_clients=8, local_steps=2, local_lr=0.05,
+                   local_batch=8, compressor=ccfg)
+    kw = dict(fused_decode=True, syn_loss_fn=model.syn_loss, syn_spec=spec)
+    from repro.data.synthetic import make_class_image_dataset
+    from repro.fl.round import fl_init
+    import jax.numpy as jnp
+    ds = make_class_image_dataset(jax.random.PRNGKey(5), 200,
+                                  MNIST_SPEC.input_shape, 10)
+    rng = np.random.default_rng(0)
+    bx = np.stack([np.asarray(ds.x)[rng.choice(200, (2, 8))] for _ in range(8)])
+    by = np.stack([np.asarray(ds.y)[rng.choice(200, (2, 8))] for _ in range(8)])
+    batches = {"x": jnp.asarray(bx), "y": jnp.asarray(by)}
+    params = model.init(jax.random.PRNGKey(0))
+    s0 = fl_init(params, 8)
+    key = jax.random.PRNGKey(7)
+    rf_v = make_fl_round(model.loss, comp, cfg, mesh=mesh, **kw)
+    rf_s = make_fl_round(model.loss, comp, cfg, client_parallel="shard_map",
+                         mesh=mesh, **kw)
+    s1, _ = jax.jit(rf_v)(s0, batches, key)
+    s2, _ = jax.jit(rf_s)(s0, batches, key)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+    print("ok fused")
+
+
+def scenario_ef_donation():
+    import jax
+    import numpy as np
+
+    from repro.fl.sharding import make_fl_shardings
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    sh = make_fl_shardings(mesh)
+    params, engine, CompressorConfig = _world()
+    eng, state = engine(CompressorConfig(kind="identity",
+                                         error_feedback=False),
+                        sh, "shard_map", mesh)
+
+    def ef_spec(st):
+        leaf = jax.tree_util.tree_leaves(st.ef)[0]
+        return leaf.sharding.spec, leaf.sharding
+
+    spec0, sharding0 = ef_spec(state)
+    assert sharding0 == sh.client, (spec0, sh.client.spec)
+    # each device owns exactly its N/8 clients' residual slice
+    shards = jax.tree_util.tree_leaves(state.ef)[0].addressable_shards
+    assert len(shards) == 8
+    assert all(s.data.shape[0] == 1 for s in shards), \
+        [s.data.shape for s in shards]
+
+    old_leaves = jax.tree_util.tree_leaves((state.params, state.ef))
+    state2, _ = eng.run_block(state, 2)
+    donated = [l.is_deleted() for l in old_leaves]
+    assert any(donated) and all(donated), \
+        "donation must consume the whole sharded FLState"
+    spec2, sharding2 = ef_spec(state2)
+    assert sharding2 == sh.client, \
+        f"EF gathered off the client axis after donation: {spec2}"
+    # caller's params (deep-copied at init) survive
+    for l in jax.tree_util.tree_leaves(params):
+        assert not l.is_deleted()
+    # second block: the donated round-trip keeps working, spec still pinned
+    state3, ms = eng.run_block(state2, 2)
+    assert np.isfinite(np.asarray(ms.loss)).all()
+    _, sharding3 = ef_spec(state3)
+    assert sharding3 == sh.client
+    assert int(state3.round) == 4
+    print("ok ef_donation")
+
+
+def scenario_sharding_units():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import pytest as _pytest
+
+    from repro.fl.engine import ClientPools
+    from repro.fl.round import FLState, fl_init
+    from repro.fl.sharding import make_fl_shardings
+    from repro.launch.mesh import client_axes, make_host_mesh
+
+    mesh = make_host_mesh()
+    assert mesh.devices.shape == (8, 1)
+    sh = make_fl_shardings(mesh)
+    assert sh.axes == client_axes(mesh) == ("data",)
+    assert sh.client_shards == 8
+    assert sh.replicated.spec == jax.sharding.PartitionSpec()
+
+    with _pytest.raises(ValueError, match="not divisible"):
+        sh.check_divisible(10)
+
+    # placement: params replicated, EF leading-axis split 8 ways
+    params = {"w": jnp.ones((16, 4)), "b": jnp.ones((4,))}
+    state = sh.place_state(fl_init(params, 16))
+    assert state.params["w"].sharding.is_fully_replicated
+    efs = state.ef["w"].addressable_shards
+    assert len(efs) == 8 and all(s.data.shape == (2, 16, 4) for s in efs)
+
+    pools = sh.place_pools(ClientPools(jnp.zeros((16, 5), jnp.int32),
+                                       jnp.ones((16,), jnp.int32)))
+    assert all(s.data.shape == (2, 5)
+               for s in pools.index.addressable_shards)
+
+    # in-jit constraint pins a traced client tree to the same sharding
+    @jax.jit
+    def f(x):
+        return sh.constrain_client_tree({"x": x})["x"] * 2
+
+    out = f(jnp.ones((16, 3)))
+    assert out.sharding == sh.client
+
+    # make_host_mesh divisibility guard
+    with _pytest.raises(ValueError, match="n % model"):
+        make_host_mesh(model=3)
+    print("ok sharding_units")
+
+
+SCENARIOS = {
+    "bitexact": scenario_bitexact,
+    "ef_donation": scenario_ef_donation,
+    "sharding_units": scenario_sharding_units,
+}
+
+
+if __name__ == "__main__":
+    import sys
+
+    SCENARIOS[sys.argv[1]]()

@@ -15,7 +15,9 @@ from repro.launch.mesh import client_axes, num_clients_for
 from repro.models import params as params_lib
 from repro.models.build import build_model
 
-pytestmark = pytest.mark.skipif(
+# per-test (not module-wide): the subprocess-backed tests below run their
+# multi-device half in a forced-8-device child and work from any parent
+needs_multidev = pytest.mark.skipif(
     len(jax.devices()) < 2 and os.environ.get("FORCE_SHARDING_TESTS") != "1",
     reason="needs >=2 devices (run under dryrun flags for multi-dev)")
 
@@ -26,6 +28,7 @@ def _mesh():
     return jax.make_mesh((n // m, m), ("data", "model"))
 
 
+@needs_multidev
 def test_param_specs_rank_and_divisibility():
     mesh = _mesh()
     for arch in ("tinyllama-1.1b", "qwen3-moe-30b-a3b", "mamba2-370m",
@@ -56,6 +59,7 @@ SMALL = {
 }
 
 
+@needs_multidev
 @pytest.mark.parametrize("shape", list(SMALL))
 def test_entries_lower_on_host_mesh(shape, monkeypatch):
     monkeypatch.setattr(specs_lib, "INPUT_SHAPES", SMALL)
@@ -71,7 +75,27 @@ def test_entries_lower_on_host_mesh(shape, monkeypatch):
     assert cost.get("flops", 0) > 0
 
 
+@needs_multidev
 def test_client_axes():
     mesh = _mesh()
     assert client_axes(mesh) == ("data",)
     assert num_clients_for(mesh) == mesh.devices.shape[0]
+
+
+def test_make_host_mesh_rejects_nondivisible_model():
+    """A truncated (n // model, model) mesh would silently drop devices —
+    make_host_mesh must refuse instead."""
+    from repro.launch.mesh import make_host_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="n % model"):
+        make_host_mesh(model=n + 1)          # n % (n+1) != 0 for any n >= 1
+    with pytest.raises(ValueError, match="n % model"):
+        make_host_mesh(model=0)
+
+
+def test_fl_shardings_units_on_eight_devices(multidev_scenario):
+    """FLShardings placement contract on a real 8-device host mesh
+    (subprocess — the pytest process is pinned to 1 device): replicated
+    params, 8-way EF/pool shards, in-jit batch constraint, divisibility
+    guards in both FLShardings and make_host_mesh."""
+    multidev_scenario("sharding_units")
