@@ -26,11 +26,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CompressorConfig, FLConfig
+from repro.core.baselines import compression_rate_bytes
 from repro.core.compressor import make_compressor
 from repro.core import flat
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset
-from repro.fl.budget import matched_compressors, payload_budget
+from repro.fl.budget import (matched_compressors, measured_wire_bytes,
+                             payload_budget)
 from repro.fl.engine import RoundEngine, device_pools, vision_batcher
 from repro.fl.round import make_fl_round
 from repro.models.build import vision_syn_spec
@@ -48,8 +50,13 @@ class ExperimentResult:
     cosine_curve: List[float]         # mean compression efficiency per round
     payload_floats: float             # per-client uplink floats per round
     model_params: int
-    comp_rate: float                  # paper Eq. 1
+    comp_rate: float                  # paper Eq. 1 (accounted floats)
     seconds: float
+    # measured wire size (repro.comm codec frame, header included); None for
+    # kinds without a wire codec. Reported NEXT TO the accounted floats —
+    # the honest uplink bill vs the paper's convention.
+    wire_bytes: Optional[float] = None
+    comp_rate_bytes: Optional[float] = None
 
     @property
     def final_acc(self) -> float:
@@ -77,7 +84,14 @@ def run_fl(
     seed: int = 0,
     label: Optional[str] = None,
     sigma: float = 0.35,
+    wire: str = "float",
 ) -> ExperimentResult:
+    """``wire='codec'`` runs the round in serialized-bytes mode (only framed
+    uint8 buffers cross the client/server boundary; see repro.comm) —
+    bit-identical to float mode for every lossless codec, and the measured
+    ``wire_bytes`` column is filled either way."""
+    if wire not in ("float", "codec"):
+        raise ValueError(f"wire must be 'float' or 'codec', got {wire!r}")
     t_start = time.time()
     spec = DATASETS[dataset]
     key = jax.random.PRNGKey(seed)
@@ -99,8 +113,14 @@ def run_fl(
     fl_cfg = FLConfig(num_clients=num_clients, local_steps=local_steps,
                       local_lr=local_lr, local_batch=local_batch,
                       compressor=comp, seed=seed)
+    round_kw = {}
+    if wire == "codec":
+        from repro.comm import make_codec
+        round_kw = dict(wire="codec",
+                        codec=make_codec(comp, params, syn_spec=syn_spec,
+                                         syn_loss_fn=model.syn_loss))
     engine = RoundEngine(
-        make_fl_round(model.loss, compressor, fl_cfg),
+        make_fl_round(model.loss, compressor, fl_cfg, **round_kw),
         vision_batcher(train.x, train.y, device_pools(parts),
                        local_steps, local_batch),
         seed=seed)
@@ -122,11 +142,15 @@ def run_fl(
     coses = [float(v) for v in cos.reshape(len(losses), -1).mean(axis=1)]
     accs = [v for _, v in hist.evals]
 
+    wb = measured_wire_bytes(comp, params, syn_spec=syn_spec)
     return ExperimentResult(
         name=label or f"{model_name}/{dataset}/{comp.kind}",
         acc_curve=accs, loss_curve=losses, cosine_curve=coses,
         payload_floats=float(payload), model_params=d,
-        comp_rate=float(payload) / d, seconds=time.time() - t_start)
+        comp_rate=float(payload) / d, seconds=time.time() - t_start,
+        wire_bytes=wb,
+        comp_rate_bytes=None if wb is None
+        else compression_rate_bytes(wb, d))
 
 
 def fmt_table(rows: Sequence[Tuple], headers: Sequence[str]) -> str:

@@ -16,7 +16,8 @@ import time
 
 from benchmarks import (bench_collectives, bench_fedsynth, bench_fig1,
                         bench_fig7, bench_kernels, bench_round_engine,
-                        bench_ssweep, bench_table2, bench_table3, bench_table4)
+                        bench_ssweep, bench_table2, bench_table3,
+                        bench_table4, bench_wire)
 
 BENCHES = {
     "fig1": bench_fig1.run,          # convergence vs rate
@@ -29,6 +30,7 @@ BENCHES = {
     "kernels": bench_kernels.run,    # fused-kernel pass accounting
     "round_engine": bench_round_engine.run,  # scanned engine vs python loop
     "collectives": bench_collectives.run,    # sharded fan-out wire bytes
+    "wire": bench_wire.run,                  # serialized codec bytes + parity
 }
 
 

@@ -12,6 +12,10 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
   1% (HLO byte totals are compile-deterministic; the slack only absorbs
   jax-version drift), any collective appearing inside the per-client
   encode region, or any ``pass_*`` gate flipping false.
+* ``BENCH_wire.json``: any round-trip loss (decode∘encode no longer
+  bit-exact, fresh-run absolute — a lossy codec is a bug regardless of
+  HEAD), any growth in a method's measured wire bytes, any header-overhead
+  regression >1% (relative), or any ``pass_*`` gate flipping false.
 * ``BENCH_round_engine.json``: >5% drop in the engine's driver-path
   rounds/sec relative to the same run's python-loop baseline (the
   ``driver.speedup`` ratio — absolute rounds/sec swings 2x+ with load on
@@ -135,10 +139,38 @@ def check_collectives(fresh, base, tol):
     return probs
 
 
+def check_wire(fresh, base, tol):
+    probs = []
+    # round-trip loss fails absolutely: a codec that stopped being
+    # bit-exact is broken even if HEAD's artifact predates the gate
+    for flag in ("pass_roundtrip", "pass_recon_consistency"):
+        if _get(fresh, flag) is False:
+            probs.append(f"{flag} is false: decode∘encode round-trip loss")
+    f_m, b_m = _get(fresh, "measure.methods"), _get(base, "measure.methods")
+    if isinstance(f_m, dict) and isinstance(b_m, dict):
+        for k in sorted(set(f_m) & set(b_m)):
+            f_b, b_b = _get(f_m[k], "measured_bytes"), _get(b_m[k], "measured_bytes")
+            if f_b is not None and b_b is not None and f_b > b_b:
+                probs.append(f"{k}: measured wire bytes grew {b_b} -> {f_b}")
+            f_h = _get(f_m[k], "header_overhead")
+            b_h = _get(b_m[k], "header_overhead")
+            if f_h is not None and b_h is not None and f_h > 1.01 * b_h:
+                probs.append(f"{k}: header overhead regressed >1%: "
+                             f"{b_h:.4f} -> {f_h:.4f}")
+    # (pass_roundtrip/pass_recon_consistency are absolute above — not
+    # repeated here, so one failure reports once)
+    for gate in ("pass", "pass_signsgd_bytes", "pass_threesfc_bytes",
+                 "pass_round_parity", "pass_channel_accounting"):
+        if _get(base, gate) and not _get(fresh, gate):
+            probs.append(f"{gate} gate flipped to false")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
     "BENCH_collectives.json": check_collectives,
+    "BENCH_wire.json": check_wire,
 }
 
 
@@ -174,21 +206,22 @@ def main(argv=None) -> int:
             print(f"check_bench: cannot read committed {name}: {e}",
                   file=sys.stderr)
             return 2
-        if base is None:
-            print(f"  {name}: new artifact (not at HEAD) — skipped")
-            continue
         checker = CHECKS.get(name)
         if checker is None:
             print(f"  {name}: no regression rules registered — skipped")
             continue
+        # new-at-HEAD artifacts still get the checker's *absolute* rules
+        # (every base-relative probe is None-guarded); otherwise a lossy
+        # codec could land in the very commit that introduces its bench
         probs = checker(fresh, base, args.tolerance)
+        label = "new artifact (absolute checks only)" if base is None else "ok"
         if probs:
             failures += len(probs)
             print(f"  {name}: REGRESSION")
             for p in probs:
                 print(f"    - {p}")
         else:
-            print(f"  {name}: ok")
+            print(f"  {name}: {label}")
     if failures:
         print(f"check_bench: {failures} regression(s) vs HEAD", file=sys.stderr)
         return 1

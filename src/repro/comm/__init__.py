@@ -1,0 +1,13 @@
+"""repro.comm — the wire-format layer: framed bytes, not accounted floats.
+
+``frame``  — versioned fixed-layout header; static sizes usable under jit.
+``codec``  — per-compressor encode/decode between payloads and uint8 frames.
+``channel``— in-process transport moving only encoded buffers, with byte
+             counters.
+"""
+from repro.comm.channel import InProcessChannel, LinkStats
+from repro.comm.codec import (CODECS, Codec, make_codec, wire_bytes)
+from repro.comm.frame import FrameSpec, parse_header
+
+__all__ = ["CODECS", "Codec", "FrameSpec", "InProcessChannel", "LinkStats",
+           "make_codec", "parse_header", "wire_bytes"]

@@ -1,0 +1,77 @@
+"""In-process channel: only encoded buffers move between the two halves.
+
+``InProcessChannel`` is the transport stand-in for the codec subsystem: the
+client half may hand it nothing but framed ``uint8`` buffers (anything else
+is a type error — that is the point: no float trees on the wire), and the
+server half receives host copies, with per-round uplink/downlink byte
+counters. It is deliberately host-level — the jitted round keeps buffers on
+device; this channel is how the *driver* layer (benchmarks, future async /
+multi-process transports on the ROADMAP) moves and bills them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LinkStats:
+    """Byte counters for one direction of the link."""
+
+    total_bytes: int = 0
+    messages: int = 0
+    per_round: List[int] = dataclasses.field(default_factory=list)
+
+    def _record(self, nbytes: int):
+        self.total_bytes += nbytes
+        self.messages += 1
+        if not self.per_round:
+            self.per_round.append(0)
+        self.per_round[-1] += nbytes
+
+    def _new_round(self):
+        self.per_round.append(0)
+
+
+class InProcessChannel:
+    """Moves encoded uint8 buffers client->server (uplink) and
+    server->client (downlink), billing every byte."""
+
+    def __init__(self):
+        self.uplink = LinkStats()
+        self.downlink = LinkStats()
+        self._round = 0
+
+    @property
+    def round(self) -> int:
+        return self._round
+
+    def begin_round(self) -> int:
+        """Open a new per-round accounting bucket; returns its index."""
+        self.uplink._new_round()
+        self.downlink._new_round()
+        self._round = len(self.uplink.per_round) - 1
+        return self._round
+
+    @staticmethod
+    def _as_wire(buf) -> np.ndarray:
+        b = np.asarray(buf)
+        if b.dtype != np.uint8 or b.ndim != 1:
+            raise TypeError(
+                f"channel carries 1-D uint8 frames only, got "
+                f"{b.dtype}{list(b.shape)} — encode first (repro.comm.codec)")
+        return b.copy()                  # the wire: a detached host copy
+
+    def send_up(self, buf) -> np.ndarray:
+        """Client -> server. Returns the host copy the server receives."""
+        b = self._as_wire(buf)
+        self.uplink._record(b.nbytes)
+        return b
+
+    def send_down(self, buf) -> np.ndarray:
+        """Server -> client (e.g. a framed model broadcast)."""
+        b = self._as_wire(buf)
+        self.downlink._record(b.nbytes)
+        return b

@@ -1,0 +1,485 @@
+"""Codec registry: each compressor's payload as actual serialized bytes.
+
+Every codec turns the method-specific wire payload a compressor emits
+(``core.compressor.TreeCompressed.wire``) into ONE contiguous ``uint8``
+buffer — framed by ``comm.frame`` — and decodes it back bit-exactly. This is
+the repo's honest answer to "how many bytes cross the network": the
+accounted float conventions in ``core.baselines`` (signSGD = d/32 + 1
+floats, DGC = 2k floats, ...) become *measured* sizes:
+
+* **identity** (FedAvg): the raw f32 leaf stream — 4d bytes.
+* **topk** (DGC): per leaf, a f32 value stream (4k) plus the kept indices
+  bit-packed at ``ceil(log2 n_leaf)`` bits each.
+* **signsgd**: ONE bit per coordinate — the whole tree's sign stream packed
+  32→1 through the Pallas kernel pair (``kernels.bitpack``) — plus one f32
+  scale per leaf. ``ceil(d/8)`` payload bytes, the paper's 32x limit made
+  real. 1-bit semantics: bit = (x >= 0), so exact zeros decode to +scale
+  (a 3-valued sign does not fit in 1 bit; ``client_view`` applies the same
+  convention on the client so EF and the server stay consistent).
+* **stc**: per leaf, ternary = 1 sign bit per kept entry + packed indices
+  + one f32 mu.
+* **threesfc**: the ``(D_syn, s)`` synthetic payload under a dtype policy
+  (fp32 lossless / fp16 / bf16), ``s`` always f32. The server-side
+  ``recon_tree`` is Eq. 10's one backward on the decoded payload.
+
+Decode round-trip contract: ``decode(encode(wire))`` equals the canonical
+payload bit-exactly, where canonical means "after the policy cast" (fp32
+policies are strictly lossless). ``wire_bytes(cfg, params)`` exposes the
+static frame size, so byte accounting works under jit without touching data.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import frame
+from repro.configs.base import CompressorConfig
+from repro.core import flat
+from repro.core.compressor import TreeCompressed, leaf_k
+from repro.core.threesfc import SynData, SynSpec
+from repro.kernels import bitpack
+
+PyTree = Any
+
+POLICY_DTYPES = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
+POLICY_ITEMBYTES = {"fp32": 4, "fp16": 2, "bf16": 2}
+
+
+# ---------------------------------------------------------------------------
+# byte/bit stream primitives (jit/vmap-safe, static shapes)
+# ---------------------------------------------------------------------------
+
+
+def array_to_bytes(x: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Flat little-endian byte view of ``x`` cast to ``dtype``."""
+    v = jnp.asarray(x, dtype).reshape(-1)
+    if v.size == 0:
+        return jnp.zeros((0,), jnp.uint8)
+    return jax.lax.bitcast_convert_type(v, jnp.uint8).reshape(-1)
+
+
+def bytes_to_array(b: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``array_to_bytes`` (``shape``/``dtype`` static)."""
+    n = int(np.prod(shape)) if len(shape) else 1
+    if n == 0:
+        return jnp.zeros(shape, dtype)
+    item = jnp.dtype(dtype).itemsize
+    return jax.lax.bitcast_convert_type(
+        b.reshape(n, item), dtype).reshape(shape)
+
+
+def index_width(n: int) -> int:
+    """Bits per index into a size-``n`` leaf: ceil(log2 n), min 1."""
+    return max(1, int(n - 1).bit_length())
+
+
+def stream_bytes(count: int, width: int) -> int:
+    return -(-count * width // 8)
+
+
+def pack_uint_stream(vals: jax.Array, width: int) -> jax.Array:
+    """(k,) uint -> ceil(k*width/8) uint8, LSB-first within the stream."""
+    k = vals.size
+    v = jnp.asarray(vals, jnp.uint32)
+    bit_idx = jnp.arange(width, dtype=jnp.uint32)
+    bits = ((v[:, None] >> bit_idx) & 1).reshape(-1)         # k*width bits
+    nbytes = stream_bytes(k, width)
+    bits = jnp.pad(bits, (0, nbytes * 8 - bits.size))
+    return jnp.sum(
+        bits.reshape(nbytes, 8) << jnp.arange(8, dtype=jnp.uint32),
+        axis=-1, dtype=jnp.uint32).astype(jnp.uint8)
+
+
+def unpack_uint_stream(b: jax.Array, count: int, width: int) -> jax.Array:
+    """Inverse of ``pack_uint_stream`` -> (count,) uint32."""
+    bits = ((b[:, None].astype(jnp.uint32)
+             >> jnp.arange(8, dtype=jnp.uint32)) & 1).reshape(-1)
+    bits = bits[: count * width].reshape(count, width)
+    return jnp.sum(bits << jnp.arange(width, dtype=jnp.uint32),
+                   axis=-1, dtype=jnp.uint32)
+
+
+def _words_to_bytes(words: jax.Array, nbytes: int) -> jax.Array:
+    b = jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(-1)
+    return b[:nbytes]
+
+
+def _bytes_to_words(b: jax.Array, nwords: int) -> jax.Array:
+    b = jnp.pad(b, (0, nwords * 4 - b.size))
+    return jax.lax.bitcast_convert_type(b.reshape(nwords, 4), jnp.uint32)
+
+
+def _pm1(x: jax.Array) -> jax.Array:
+    """The 1-bit wire sign: +1 where x >= 0, else -1 (never 0)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# codec protocol
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """Encode a compressor's wire payload into framed bytes and back.
+
+    Subclasses fill ``_section_bytes`` (static layout), ``_pack`` (payload ->
+    per-section uint8 arrays), ``_unpack`` (sections -> canonical payload)
+    and ``recon_tree`` (canonical payload -> server reconstruction).
+    ``client_view`` returns the client-side dequantized reconstruction
+    (and/or its (direction, scale) factorization) so EF in wire mode uses
+    exactly what the server will apply.
+    """
+
+    kind: str = ""
+
+    def __init__(self, cfg: CompressorConfig, params: PyTree,
+                 policy: str = "fp32"):
+        if policy not in POLICY_DTYPES:
+            raise ValueError(f"unknown dtype policy {policy!r}")
+        self.cfg = cfg
+        self.policy = policy
+        leaves, self.treedef = jax.tree_util.tree_flatten(params)
+        self.shapes = [tuple(jnp.shape(l)) for l in leaves]
+        self.sizes = [int(np.prod(s)) if len(s) else 1 for s in self.shapes]
+        self.d = int(sum(self.sizes))
+        self.spec = frame.FrameSpec(self.kind, policy,
+                                    tuple(self._section_bytes()))
+
+    # -- static layout -----------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self.spec.nbytes
+
+    @property
+    def header_bytes(self) -> int:
+        return self.spec.header_bytes
+
+    def _section_bytes(self):
+        raise NotImplementedError
+
+    # -- wire --------------------------------------------------------------
+    def encode(self, wire, round_idx=0, client_idx=0) -> jax.Array:
+        """wire payload -> (nbytes,) uint8 framed buffer (jit/vmap-safe)."""
+        sections = self._pack(wire)
+        for s, want in zip(sections, self.spec.section_bytes):
+            assert s.dtype == jnp.uint8 and s.size == want, \
+                (self.kind, s.shape, want)
+        header = frame.encode_header(self.spec, round_idx, client_idx)
+        return jnp.concatenate([header, *sections]) if sections else header
+
+    def decode(self, buf: jax.Array):
+        """(nbytes,) uint8 -> canonical payload (bit-exact round trip)."""
+        parts = [buf[o:o + n] for o, n in
+                 zip(self.spec.section_offsets, self.spec.section_bytes)]
+        return self._unpack(parts)
+
+    def _pack(self, wire):
+        raise NotImplementedError
+
+    def _unpack(self, sections):
+        raise NotImplementedError
+
+    # -- reconstruction ----------------------------------------------------
+    def canonical(self, wire):
+        """What ``decode(encode(wire))`` must reproduce, bit for bit —
+        computed WITHOUT touching the byte stream (the round-trip oracle).
+        Identity for lossless codecs; quantizing codecs apply their wire
+        semantics (1-bit signs, dtype policy) here."""
+        return wire
+
+    def recon_tree(self, canon, params: PyTree) -> PyTree:
+        """Server-side reconstruction from the decoded payload."""
+        raise NotImplementedError
+
+    def client_view(self, out: TreeCompressed):
+        """(recon, direction, scale) the client must use in wire mode.
+
+        Defaults to the compressor's own (lossless codecs); quantizing
+        codecs override so client EF matches the server's decode exactly.
+        """
+        return out.recon, out.direction, out.scale
+
+    def _leaf_tree(self, leaves) -> PyTree:
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+CODECS: Dict[str, Callable[..., Codec]] = {}
+
+
+def _register(cls):
+    CODECS[cls.kind] = cls
+    return cls
+
+
+@_register
+class IdentityCodec(Codec):
+    """FedAvg: the raw f32 leaf stream, 4d payload bytes."""
+
+    kind = "identity"
+
+    def _section_bytes(self):
+        return (4 * self.d,)
+
+    def _pack(self, wire):
+        leaves = jax.tree_util.tree_leaves(wire)
+        return [jnp.concatenate([array_to_bytes(l) for l in leaves])]
+
+    def _unpack(self, sections):
+        vec = bytes_to_array(sections[0], (self.d,))
+        leaves, off = [], 0
+        for shape, n in zip(self.shapes, self.sizes):
+            leaves.append(vec[off:off + n].reshape(shape))
+            off += n
+        return self._leaf_tree(leaves)
+
+    def canonical(self, wire):
+        # the wire stream is f32; decode hands back f32 leaves
+        return jax.tree_util.tree_map(
+            lambda l: jnp.asarray(l, jnp.float32), wire)
+
+    def recon_tree(self, canon, params):
+        return canon
+
+
+@_register
+class TopkCodec(Codec):
+    """DGC: per leaf, f32 values + indices at ceil(log2 n_leaf) bits."""
+
+    kind = "topk"
+
+    def _layout(self):
+        for n in self.sizes:
+            yield n, leaf_k(n, self.cfg.keep_ratio), index_width(n)
+
+    def _section_bytes(self):
+        out = []
+        for _, k, w in self._layout():
+            out += [4 * k, stream_bytes(k, w)]
+        return out
+
+    def _pack(self, wire):
+        sections = []
+        for (vals, idx), (_, k, w) in zip(wire, self._layout()):
+            sections.append(array_to_bytes(vals))
+            sections.append(pack_uint_stream(idx.astype(jnp.uint32), w))
+        return sections
+
+    def _unpack(self, sections):
+        out = []
+        for i, (_, k, w) in enumerate(self._layout()):
+            vals = bytes_to_array(sections[2 * i], (k,))
+            idx = unpack_uint_stream(sections[2 * i + 1], k, w)
+            out.append((vals, idx.astype(jnp.int32)))
+        return tuple(out)
+
+    def recon_tree(self, canon, params):
+        leaves = []
+        for (vals, idx), shape, n in zip(canon, self.shapes, self.sizes):
+            leaves.append(jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+                          .reshape(shape))
+        return self._leaf_tree(leaves)
+
+
+@_register
+class SignCodec(Codec):
+    """signSGD: one packed sign bit per coordinate + one f32 scale per leaf.
+
+    The sign stream covers the *concatenated* tree (ceil(d/8) bytes, byte-
+    exact — no per-leaf padding), packed through the Pallas 32→1 kernel.
+    """
+
+    kind = "signsgd"
+
+    def _section_bytes(self):
+        return (-(-self.d // 8), 4 * len(self.sizes))
+
+    def _pack(self, wire):
+        u, scales = wire
+        flatv = jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32)
+             for l in jax.tree_util.tree_leaves(u)])
+        words = bitpack.pack_signs(flatv)
+        return [_words_to_bytes(words, -(-self.d // 8)),
+                array_to_bytes(scales)]
+
+    def _unpack(self, sections):
+        words = _bytes_to_words(sections[0], -(-self.d // 32))
+        pm1 = bitpack.unpack_signs(words, self.d)
+        scales = bytes_to_array(sections[1], (len(self.sizes),))
+        leaves, off = [], 0
+        for i, (shape, n) in enumerate(zip(self.shapes, self.sizes)):
+            leaves.append((scales[i] * pm1[off:off + n]).reshape(shape))
+            off += n
+        return self._leaf_tree(leaves)
+
+    def recon_tree(self, canon, params):
+        return canon
+
+    def canonical(self, wire):
+        u, scales = wire
+        leaves = [s * _pm1(l) for s, l
+                  in zip(scales, jax.tree_util.tree_leaves(u))]
+        return self._leaf_tree(
+            [l.reshape(sh) for l, sh in zip(leaves, self.shapes)])
+
+    def client_view(self, out):
+        return self.canonical(out.wire), None, None
+
+
+@_register
+class StcCodec(Codec):
+    """STC: per leaf, 1 sign bit per kept entry + packed indices + f32 mu.
+
+    Same 1-bit sign semantics as ``SignCodec``: a kept value that is
+    *exactly* zero (possible only when a leaf has fewer than k nonzeros)
+    decodes to +mu where the float path reconstructs 0. ``bench_wire``
+    measures the zero-kept count so a parity divergence is attributable.
+    """
+
+    kind = "stc"
+
+    def _layout(self):
+        for n in self.sizes:
+            yield n, leaf_k(n, self.cfg.keep_ratio), index_width(n)
+
+    def _section_bytes(self):
+        out = []
+        for _, k, w in self._layout():
+            out += [stream_bytes(k, 1), stream_bytes(k, w), 4]
+        return out
+
+    def _pack(self, wire):
+        sections = []
+        for (sgn, idx, mu), (_, k, w) in zip(wire, self._layout()):
+            sections.append(pack_uint_stream((sgn >= 0).astype(jnp.uint32), 1))
+            sections.append(pack_uint_stream(idx.astype(jnp.uint32), w))
+            sections.append(array_to_bytes(mu))
+        return sections
+
+    def _unpack(self, sections):
+        out = []
+        for i, (_, k, w) in enumerate(self._layout()):
+            bits = unpack_uint_stream(sections[3 * i], k, 1)
+            pm1 = bits.astype(jnp.float32) * 2.0 - 1.0
+            idx = unpack_uint_stream(sections[3 * i + 1], k, w)
+            mu = bytes_to_array(sections[3 * i + 2], ())
+            out.append((pm1, idx.astype(jnp.int32), mu))
+        return tuple(out)
+
+    def recon_tree(self, canon, params):
+        leaves = []
+        for (pm1, idx, mu), shape, n in zip(canon, self.shapes, self.sizes):
+            leaves.append(jnp.zeros((n,), jnp.float32).at[idx].set(mu * pm1)
+                          .reshape(shape))
+        return self._leaf_tree(leaves)
+
+    def canonical(self, wire):
+        return tuple((_pm1(sgn), idx, mu) for sgn, idx, mu in wire)
+
+    def client_view(self, out):
+        return self.recon_tree(self.canonical(out.wire), None), None, None
+
+
+@_register
+class ThreesfcCodec(Codec):
+    """3SFC: the (D_syn, s) payload under a dtype policy; s always f32.
+
+    ``recon_tree`` is the paper's decoder (Eq. 10): one backward of the
+    global model on the decoded synthetic batch, scaled by s.
+    """
+
+    kind = "threesfc"
+
+    def __init__(self, cfg, params, policy="fp32", *, syn_spec: SynSpec,
+                 syn_loss_fn=None):
+        self.syn_spec = syn_spec
+        self.syn_loss_fn = syn_loss_fn
+        lead = syn_spec.label_lead or syn_spec.x_shape[:1]
+        if syn_spec.label_rank:
+            self.y_shape = (*lead, syn_spec.label_rank)
+            self.v_shape = (syn_spec.label_rank, syn_spec.num_classes)
+        else:
+            self.y_shape = (*lead, syn_spec.num_classes)
+            self.v_shape = (0, 0)
+        super().__init__(cfg, params, policy)
+
+    def _section_bytes(self):
+        item = POLICY_ITEMBYTES[self.policy]
+        sizes = [int(np.prod(s)) for s in
+                 (self.syn_spec.x_shape, self.y_shape, self.v_shape)]
+        return [item * n for n in sizes] + [4]
+
+    def _pack(self, wire):
+        syn, s = wire
+        dt = POLICY_DTYPES[self.policy]
+        return [array_to_bytes(syn.x, dt), array_to_bytes(syn.y, dt),
+                array_to_bytes(syn.y_rank, dt), array_to_bytes(s)]
+
+    def _unpack(self, sections):
+        dt = POLICY_DTYPES[self.policy]
+        x = bytes_to_array(sections[0], self.syn_spec.x_shape, dt)
+        y = bytes_to_array(sections[1], self.y_shape, dt)
+        v = bytes_to_array(sections[2], self.v_shape, dt)
+        s = bytes_to_array(sections[3], ())
+        syn = SynData(x.astype(jnp.float32), y.astype(jnp.float32),
+                      v.astype(jnp.float32))
+        return syn, s
+
+    def canonical(self, wire):
+        syn, s = wire
+        dt = POLICY_DTYPES[self.policy]
+        return (SynData(*[jnp.asarray(a, dt).astype(jnp.float32)
+                          for a in syn]),
+                jnp.asarray(s, jnp.float32))
+
+    def recon_tree(self, canon, params):
+        assert self.syn_loss_fn is not None, \
+            "threesfc decode-side reconstruction needs syn_loss_fn"
+        syn, s = canon
+        gw = jax.grad(self.syn_loss_fn)(params, syn)
+        return flat.tree_scale(gw, s)
+
+    def client_view(self, out):
+        # EF runs on the factored (gw, s) — exact at fp32 policy (the only
+        # policy the round's wire mode admits; see fl.round wire checks).
+        return None, out.direction, out.scale
+
+
+# ---------------------------------------------------------------------------
+# construction helpers
+# ---------------------------------------------------------------------------
+
+
+def make_codec(cfg: CompressorConfig, params: PyTree, *,
+               syn_spec: Optional[SynSpec] = None,
+               syn_loss_fn=None, policy: Optional[str] = None) -> Codec:
+    """Build the registered codec for ``cfg.kind`` over a params template.
+
+    ``params`` may be real arrays or ``ShapeDtypeStruct``s — only shapes are
+    read. Raises ``KeyError`` for kinds without a wire format (randk,
+    fedsynth — see PAPERS.md; their budgets remain accounted-only).
+    """
+    if cfg.kind not in CODECS:
+        raise KeyError(
+            f"no wire codec registered for compressor kind {cfg.kind!r} "
+            f"(have: {sorted(CODECS)})")
+    policy = policy or getattr(cfg, "wire_dtype", "fp32")
+    if cfg.kind == "threesfc":
+        assert syn_spec is not None, "threesfc codec needs syn_spec"
+        return ThreesfcCodec(cfg, params, policy, syn_spec=syn_spec,
+                             syn_loss_fn=syn_loss_fn)
+    return CODECS[cfg.kind](cfg, params, policy)
+
+
+def wire_bytes(cfg: CompressorConfig, params: PyTree, *,
+               syn_spec: Optional[SynSpec] = None,
+               policy: Optional[str] = None) -> int:
+    """Static total frame size (header + payload) for one uplink message."""
+    return make_codec(cfg, params, syn_spec=syn_spec, policy=policy).nbytes

@@ -1,0 +1,144 @@
+"""Wire frame: a versioned fixed-layout header making every buffer
+self-describing.
+
+Every encoded uplink message is one contiguous ``uint8`` buffer::
+
+    [ header (24 B) | section table (4 B x n_sections) | sections ... ]
+
+The header layout (all multi-byte fields little-endian, the native order of
+every platform this repo targets):
+
+    offset  size  field
+    0       2     magic  b"3W"
+    2       1     version (WIRE_VERSION)
+    3       1     kind id        (KIND_IDS — CompressorConfig.kind)
+    4       1     dtype policy id (POLICY_IDS — 3SFC payload dtype)
+    5       1     n_sections
+    6       2     reserved (0)
+    8       4     round   (uint32, dynamic)
+    12      4     client  (uint32, dynamic)
+    16      4     payload bytes (sum of section lengths)
+    20      4     reserved (0)
+
+The *layout* is static per ``(CompressorConfig, params template)`` — that is
+what makes ``wire_bytes`` a static-size function usable under jit: section
+lengths live in the ``FrameSpec`` (and are also written into the buffer so a
+receiver without the config can still walk it). Only ``round`` and
+``client`` are dynamic; they are spliced in with a bitcast, so header
+construction is jit/vmap-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAGIC = b"3W"
+WIRE_VERSION = 1
+HEADER_BYTES = 24
+
+# Stable on-the-wire ids; append only, never renumber.
+KIND_IDS: Dict[str, int] = {
+    "identity": 0, "topk": 1, "randk": 2, "signsgd": 3, "stc": 4,
+    "threesfc": 5, "fedsynth": 6,
+}
+KIND_NAMES = {v: k for k, v in KIND_IDS.items()}
+
+# 3SFC payload dtype policies (see comm.codec.POLICY_DTYPES).
+POLICY_IDS: Dict[str, int] = {"fp32": 0, "fp16": 1, "bf16": 2}
+POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameSpec:
+    """Static layout of one message: everything but round/client."""
+
+    kind: str
+    policy: str
+    section_bytes: Tuple[int, ...]
+
+    @property
+    def header_bytes(self) -> int:
+        return HEADER_BYTES + 4 * len(self.section_bytes)
+
+    @property
+    def payload_bytes(self) -> int:
+        return int(sum(self.section_bytes))
+
+    @property
+    def nbytes(self) -> int:
+        return self.header_bytes + self.payload_bytes
+
+    @property
+    def section_offsets(self) -> Tuple[int, ...]:
+        """Absolute byte offset of each section inside the buffer."""
+        offs, o = [], self.header_bytes
+        for n in self.section_bytes:
+            offs.append(o)
+            o += n
+        return tuple(offs)
+
+
+def _static_header(spec: FrameSpec) -> np.ndarray:
+    """The constant part of header + section table (round/client zeroed)."""
+    h = np.zeros(spec.header_bytes, np.uint8)
+    h[0:2] = np.frombuffer(MAGIC, np.uint8)
+    h[2] = WIRE_VERSION
+    h[3] = KIND_IDS[spec.kind]
+    h[4] = POLICY_IDS[spec.policy]
+    h[5] = len(spec.section_bytes)
+    h[16:20] = np.frombuffer(
+        np.uint32(spec.payload_bytes).tobytes(), np.uint8)
+    table = np.asarray(spec.section_bytes, np.uint32)
+    h[HEADER_BYTES:] = np.frombuffer(table.tobytes(), np.uint8)
+    return h
+
+
+def _u32_bytes(x) -> jax.Array:
+    """uint32 scalar -> 4 uint8 (native/little-endian), jit-safe."""
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(x, jnp.uint32).reshape(()), jnp.uint8).reshape(4)
+
+
+def encode_header(spec: FrameSpec, round_idx=0, client_idx=0) -> jax.Array:
+    """Full header + section table as a uint8 vector (jit/vmap-safe)."""
+    h = jnp.asarray(_static_header(spec))
+    h = jax.lax.dynamic_update_slice(h, _u32_bytes(round_idx), (8,))
+    return jax.lax.dynamic_update_slice(h, _u32_bytes(client_idx), (12,))
+
+
+def parse_header(buf) -> Dict:
+    """Host-side: validate and read back a buffer's self-description."""
+    b = np.asarray(buf, np.uint8)
+    if b.ndim != 1 or b.size < HEADER_BYTES:
+        raise ValueError(f"frame too short: {b.shape}")
+    if bytes(b[0:2].tobytes()) != MAGIC:
+        raise ValueError(f"bad magic {b[:2]!r}")
+    if int(b[2]) != WIRE_VERSION:
+        raise ValueError(f"unsupported wire version {int(b[2])}")
+    n_sections = int(b[5])
+    header_bytes = HEADER_BYTES + 4 * n_sections
+    if b.size < header_bytes:
+        raise ValueError("frame shorter than its section table")
+    u32 = lambda o: int(np.frombuffer(b[o:o + 4].tobytes(), np.uint32)[0])
+    sections = tuple(
+        u32(HEADER_BYTES + 4 * i) for i in range(n_sections))
+    out = {
+        "kind": KIND_NAMES[int(b[3])],
+        "policy": POLICY_NAMES[int(b[4])],
+        "round": u32(8),
+        "client": u32(12),
+        "payload_bytes": u32(16),
+        "section_bytes": sections,
+        "header_bytes": header_bytes,
+        "nbytes": header_bytes + sum(sections),
+    }
+    if out["payload_bytes"] != sum(sections):
+        raise ValueError(
+            f"payload size {out['payload_bytes']} != section sum {sum(sections)}")
+    if b.size != out["nbytes"]:
+        raise ValueError(f"buffer is {b.size} B, frame says {out['nbytes']} B")
+    return out

@@ -98,6 +98,9 @@ class CompressorConfig:
     keep_ratio: float = 0.01
     # fedsynth baseline
     unroll_steps: int = 5
+    # wire-format dtype policy for the serialized payload (repro.comm):
+    # fp32 (lossless) | fp16 | bf16 — applies to the 3SFC (D_syn) streams
+    wire_dtype: str = "fp32"
 
 
 @dataclass(frozen=True)

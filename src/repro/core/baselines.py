@@ -11,6 +11,13 @@ exactly what the decoder would produce from the payload. Budget accounting
 * STC:          top-k + binarized values -> k (indices) + k/32 (signs) + 1 (mu)
 * identity (FedAvg): d
 
+These float counts are *conventions*, not measurements. The real wire
+format — each payload serialized into one framed ``uint8`` buffer
+(bit-packed signs, ``ceil(log2 d)``-bit index streams, dtype-policied
+synthetic payloads) with a measured byte size — lives in ``repro.comm``;
+``compression_rate_bytes`` below is the bytes-based sibling of Eq. 1 that
+the FL harness reports next to the accounted-float rate.
+
 On TPU, exact global top-k over O(d) is sort-bound; we use the Pallas
 threshold-select kernel (``repro.kernels.topk_mask``) when available and fall
 back to ``jax.lax.top_k`` here. Reconstruction semantics are identical.
@@ -24,7 +31,9 @@ import jax.numpy as jnp
 
 
 class Payload(NamedTuple):
-    """Wire-format stand-in. ``floats`` is the accounted payload size."""
+    """Accounted-size stand-in, NOT the wire format. ``floats`` is the
+    paper-convention payload size; the serialized frame (actual bytes on
+    the wire, header included) is produced by ``repro.comm.codec``."""
 
     data: tuple
     floats: float
@@ -132,5 +141,12 @@ def keep_k_for_budget(d: int, budget_floats: float) -> int:
 
 
 def compression_rate(payload_floats: float, d: int) -> float:
-    """Paper Eq. 1: compressed size / uncompressed size."""
+    """Paper Eq. 1: compressed size / uncompressed size (accounted floats)."""
     return payload_floats / float(d)
+
+
+def compression_rate_bytes(payload_bytes: float, d: int,
+                           bytes_per_param: int = 4) -> float:
+    """Eq. 1 on *measured* wire bytes (``repro.comm.wire_bytes``): encoded
+    frame size (header included) over the raw f32 tree size."""
+    return payload_bytes / (bytes_per_param * float(d))

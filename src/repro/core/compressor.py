@@ -39,6 +39,10 @@ class TreeCompressed(NamedTuple):
     not None) factor ``recon = scale · direction``, letting the EF update run
     as one fused ``e' = u − s·direction`` stream (``kernels.ops.
     tree_ef_update``) instead of reading the materialized recon again.
+    ``wire`` is the method-specific wire payload (the quantities a
+    ``repro.comm.codec`` codec serializes — value/index streams, sign
+    sources, the (D_syn, s) pair); ``None`` for kinds without a wire format.
+    Unused in float mode, so it costs nothing there (dead-code eliminated).
     """
 
     recon: Any
@@ -47,13 +51,18 @@ class TreeCompressed(NamedTuple):
     cosine: Optional[jax.Array] = None
     direction: Any = None
     scale: Optional[jax.Array] = None
+    wire: Any = None
 
 
 class TreeCompressor:
-    def __init__(self, cfg: CompressorConfig, step_fn, payload_floats_fn):
+    def __init__(self, cfg: CompressorConfig, step_fn, payload_floats_fn,
+                 compress_tree=None):
         self.cfg = cfg
         self._step = step_fn
         self._payload = payload_floats_fn
+        # (key, u_tree, params) -> TreeCompressed; exposed for the wire path
+        # and benchmarks that need the raw payload.
+        self.compress_tree = compress_tree
 
     def init_state(self, params: flat.PyTree) -> flat.PyTree:
         """EF residual pytree (zeros, f32) mirroring params."""
@@ -68,9 +77,63 @@ class TreeCompressor:
         """Returns (recon_tree, new_e_tree, CompressMetrics)."""
         return self._step(key, g_tree, e_tree, params)
 
+    def wire_step(self, key, g_tree, e_tree, params, *, codec,
+                  round_idx=0, client_idx=0):
+        """Codec-mode step: (encoded uint8 buffer, new_e_tree, metrics).
+
+        Same EF algebra as ``step`` but everything downstream of the
+        compressor sees only the serialized frame; the reconstruction used
+        for EF/cosine is the codec's *dequantized view* (``Codec.
+        client_view``), so the client stays consistent with what the server
+        will decode — identical to the float path wherever the codec is
+        lossless (identity/topk; threesfc at the fp32 policy), and the
+        documented 1-bit sign convention for signsgd/stc.
+        """
+        cfg = self.cfg
+        if self.compress_tree is None:
+            raise ValueError(f"compressor kind {cfg.kind!r} has no wire path")
+        if cfg.error_feedback:
+            u = flat.tree_add(g_tree, e_tree)
+        else:
+            u = g_tree
+        out = self.compress_tree(key, u, params)
+        if out.wire is None:
+            raise ValueError(
+                f"compressor kind {cfg.kind!r} emits no wire payload")
+        buf = codec.encode(out.wire, round_idx=round_idx,
+                           client_idx=client_idx)
+        recon, direction, scale = codec.client_view(out)
+        e_new = _ef_update(cfg, u, e_tree, recon, direction, scale)
+        cos = _efficiency_cosine(out, recon, u)
+        return buf, e_new, CompressMetrics(cos, out.floats, out.aux)
+
+
+def leaf_k(n: int, ratio: float) -> int:
+    """Kept entries for a size-n leaf at ``keep_ratio`` — the single source
+    of truth for per-leaf budgets (the wire codecs derive their static
+    layouts from the same function)."""
+    return max(1, int(round(ratio * n)))
+
 
 def _leaf_k(leaf, ratio: float) -> int:
-    return max(1, int(round(ratio * leaf.size)))
+    return leaf_k(leaf.size, ratio)
+
+
+def _ef_update(cfg, u, e_tree, recon, direction, scale):
+    """Eq. 6 residual on a (recon | direction·scale) view — the ONE copy of
+    the EF algebra, shared by the float path (the compressor's own recon)
+    and the wire path (the codec's dequantized view)."""
+    if not cfg.error_feedback:
+        return e_tree
+    if direction is not None:
+        return ops.tree_ef_update(u, direction, scale)
+    return flat.tree_sub(u, recon)
+
+
+def _efficiency_cosine(out, recon, u):
+    """cos(recon, u) unless the method already computed it fused."""
+    return out.cosine if out.cosine is not None \
+        else flat.tree_cosine(recon, u)
 
 
 def _ef_wrap(cfg, compress_tree):
@@ -84,15 +147,8 @@ def _ef_wrap(cfg, compress_tree):
         else:
             u = g_tree
         out = compress_tree(key, u, params)
-        if cfg.error_feedback:
-            if out.direction is not None:
-                e_new = ops.tree_ef_update(u, out.direction, out.scale)
-            else:
-                e_new = flat.tree_sub(u, out.recon)
-        else:
-            e_new = e_tree
-        cos = out.cosine if out.cosine is not None \
-            else flat.tree_cosine(out.recon, u)
+        e_new = _ef_update(cfg, u, e_tree, out.recon, out.direction, out.scale)
+        cos = _efficiency_cosine(out, out.recon, u)
         return out.recon, e_new, CompressMetrics(cos, out.floats, out.aux)
 
     return step
@@ -131,21 +187,26 @@ def make_compressor(
     if kind == "identity":
         def compress_tree(key, u, params):
             # recon == u exactly, so the efficiency cosine is 1 by identity —
-            # no reduction pass needed.
+            # no reduction pass needed. The wire payload is the tree itself.
             return TreeCompressed(u, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0), cosine=jnp.float32(1.0))
+                                  jnp.float32(0), cosine=jnp.float32(1.0),
+                                  wire=u)
 
     elif kind == "topk":
         def compress_tree(key, u, params):
-            def leaf(l):
+            leaves, treedef = jax.tree_util.tree_flatten(u)
+            recs, wires = [], []
+            for l in leaves:
                 k = _leaf_k(l, cfg.keep_ratio)
                 v = l.ravel()
-                vals, idx = jax.lax.top_k(jnp.abs(v), k)
-                kept = jnp.zeros_like(v).at[idx].set(v[idx])
-                return kept.reshape(l.shape)
-            recon = jax.tree_util.tree_map(leaf, u)
+                _, idx = jax.lax.top_k(jnp.abs(v), k)
+                vals = v[idx]
+                recs.append(jnp.zeros_like(v).at[idx].set(vals)
+                            .reshape(l.shape))
+                wires.append((vals, idx))
+            recon = jax.tree_util.tree_unflatten(treedef, recs)
             return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0))
+                                  jnp.float32(0), wire=tuple(wires))
 
     elif kind == "randk":
         def compress_tree(key, u, params):
@@ -164,26 +225,33 @@ def make_compressor(
 
     elif kind == "signsgd":
         def compress_tree(key, u, params):
-            def leaf(l):
-                scale = jnp.mean(jnp.abs(l))
-                return scale * jnp.sign(l)
-            recon = jax.tree_util.tree_map(leaf, u)
+            leaves, treedef = jax.tree_util.tree_flatten(u)
+            scales = [jnp.mean(jnp.abs(l)) for l in leaves]
+            recon = jax.tree_util.tree_unflatten(
+                treedef, [s * jnp.sign(l) for s, l in zip(scales, leaves)])
+            # wire: the sign *source* tree + per-leaf scales; the codec packs
+            # one bit per coordinate from it (bit = coord >= 0).
             return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0))
+                                  jnp.float32(0),
+                                  wire=(u, jnp.stack(scales)))
 
     elif kind == "stc":
         def compress_tree(key, u, params):
-            def leaf(l):
+            leaves, treedef = jax.tree_util.tree_flatten(u)
+            recs, wires = [], []
+            for l in leaves:
                 k = _leaf_k(l, cfg.keep_ratio)
                 v = l.ravel()
                 _, idx = jax.lax.top_k(jnp.abs(v), k)
                 vals = v[idx]
                 mu = jnp.mean(jnp.abs(vals))
-                kept = jnp.zeros_like(v).at[idx].set(mu * jnp.sign(vals))
-                return kept.reshape(l.shape)
-            recon = jax.tree_util.tree_map(leaf, u)
+                sgn = jnp.sign(vals)
+                recs.append(jnp.zeros_like(v).at[idx].set(mu * sgn)
+                            .reshape(l.shape))
+                wires.append((sgn, idx, mu))
+            recon = jax.tree_util.tree_unflatten(treedef, recs)
             return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0))
+                                  jnp.float32(0), wire=tuple(wires))
 
     elif kind == "threesfc":
         assert loss_fn is not None and syn_spec is not None
@@ -198,7 +266,8 @@ def make_compressor(
             # the (gw, s) factorization — EF and metrics add no extra passes.
             return TreeCompressed(res.recon, jnp.float32(payload_floats_fn(params)),
                                   res.objective, cosine=res.cosine,
-                                  direction=res.gw, scale=res.s)
+                                  direction=res.gw, scale=res.s,
+                                  wire=(res.syn, res.s))
 
     elif kind == "fedsynth":
         assert loss_fn is not None and syn_spec is not None
@@ -216,4 +285,5 @@ def make_compressor(
     else:
         raise ValueError(f"unknown compressor kind {kind!r}")
 
-    return TreeCompressor(cfg, _ef_wrap(cfg, compress_tree), payload_floats_fn)
+    return TreeCompressor(cfg, _ef_wrap(cfg, compress_tree), payload_floats_fn,
+                          compress_tree=compress_tree)

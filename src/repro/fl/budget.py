@@ -10,10 +10,14 @@ Budget math (paper Table 2 / Eq. 1): for MLP (199,210 params) the 3SFC
 payload is 28·28·1 + 10 + 1 = 795 floats -> compression ratio 250.6x.
 Competitor knobs derive from the same budget B: DGC keeps k = B/2 entries
 (value + index per entry), STC/signSGD sit at their 32x quantization limit.
+
+``measured_wire_bytes`` reports the same budgets as *serialized* sizes: the
+``repro.comm`` codec's framed uint8 buffer, measured next to the accounted
+floats wherever budgets are surfaced (``fl_harness``, ``bench_wire``).
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -42,3 +46,15 @@ def matched_compressors(model_name: str, spec: VisionSpec, d: int,
         "threesfc": CompressorConfig(kind="threesfc", syn_batch=syn_batch,
                                      syn_steps=10, syn_lr=0.1),
     }
+
+
+def measured_wire_bytes(cfg: CompressorConfig, params, *,
+                        syn_spec=None) -> Optional[float]:
+    """Serialized uplink frame size (header included) for one client-round,
+    or None for kinds without a registered wire codec (randk, fedsynth)."""
+    from repro.comm.codec import wire_bytes    # lazy: keep budget import-light
+
+    try:
+        return float(wire_bytes(cfg, params, syn_spec=syn_spec))
+    except KeyError:
+        return None

@@ -36,8 +36,23 @@ Client fan-out (``client_parallel``)
     and the single batched server backward runs replicated. The O(d)
     collective disappears entirely.
 
+Wire modes (``wire``)
+---------------------
+* ``'float'`` (default): reconstructions cross the client/server boundary as
+  float trees; wire size is *accounted* (``payload_floats``, Eq. 1).
+* ``'codec'`` (requires ``codec`` from ``repro.comm.make_codec``): each
+  client serializes its payload into ONE framed ``uint8`` buffer
+  (``compressor.wire_step``) inside the per-client region; only those
+  buffers cross the boundary (the shard_map path all-gathers the uint8
+  frames instead of float trees) and the server decodes them before
+  aggregating. ``RoundMetrics.wire_bytes_up`` then reports the *measured*
+  per-client uplink bytes. EF uses the codec's dequantized view, so client
+  and server stay consistent; wherever the codec is lossless the round is
+  bit-identical to float mode (gated by ``benchmarks/bench_wire.py``).
+
 Metrics returned per round: mean local loss, per-client cosine compression
-efficiency (paper Fig. 7), payload floats (paper Eq. 1 accounting).
+efficiency (paper Fig. 7), payload floats (paper Eq. 1 accounting), and the
+measured uplink bytes (0 in float mode — nothing was serialized).
 """
 from __future__ import annotations
 
@@ -73,6 +88,8 @@ class RoundMetrics(NamedTuple):
     cosine: jax.Array       # per-client compression efficiency (N,)
     payload_floats: jax.Array
     update_norm: jax.Array
+    # measured per-client uplink bytes (wire='codec'); 0 in float mode
+    wire_bytes_up: jax.Array = 0.0
 
 
 def fl_init(params: PyTree, num_clients: int) -> FLState:
@@ -103,6 +120,25 @@ def _check_fanout(cfg: FLConfig, client_parallel: str,
     return sh.axes
 
 
+def _check_wire(cfg: FLConfig, wire: str, codec) -> None:
+    """Validate the (wire, codec) pair for codec mode."""
+    if wire not in ("float", "codec"):
+        raise ValueError(f"wire must be 'float' or 'codec', got {wire!r}")
+    if wire == "float":
+        return
+    if codec is None:
+        raise ValueError("wire='codec' requires a codec "
+                         "(see repro.comm.make_codec)")
+    if codec.kind != cfg.compressor.kind:
+        raise ValueError(f"codec kind {codec.kind!r} does not match "
+                         f"compressor kind {cfg.compressor.kind!r}")
+    if cfg.compressor.kind == "threesfc" and codec.policy != "fp32":
+        raise ValueError(
+            "the round's wire mode requires the lossless fp32 policy for "
+            "threesfc (client EF runs on the factored (gw, s)); lossy "
+            "policies are a codec-level feature")
+
+
 def make_fl_round(
     loss_fn: Callable[[PyTree, Dict], jax.Array],
     compressor: TreeCompressor,
@@ -114,6 +150,8 @@ def make_fl_round(
     syn_spec=None,
     client_parallel: str = "vmap",
     mesh: Optional[Mesh] = None,
+    wire: str = "float",
+    codec=None,
 ) -> Callable[[FLState, PyTree, jax.Array], Tuple[FLState, RoundMetrics]]:
     """``fused_decode`` (3SFC only, §Perf beyond-paper optimization):
 
@@ -135,6 +173,7 @@ def make_fl_round(
     to that mesh instead of relying on an ambient mesh context.
     """
     axes = _check_fanout(cfg, client_parallel, mesh)
+    _check_wire(cfg, wire, codec)
 
     def one_client(global_params, ef_i, batches_i, key_i):
         g, loss = local_train(loss_fn, global_params, batches_i,
@@ -143,7 +182,7 @@ def make_fl_round(
         return recon, ef_new, loss, metrics
 
     def _server_step(state: FLState, recons, ef_new, losses, metrics,
-                     weights) -> Tuple[FLState, RoundMetrics]:
+                     weights, wire_bytes=0.0) -> Tuple[FLState, RoundMetrics]:
         """Shared server half: aggregate + update + metrics packaging.
         Inputs are full (N, ...) arrays in client order on both fan-out
         paths, so the reduction order — hence the result — is identical."""
@@ -156,8 +195,36 @@ def make_fl_round(
             cosine=metrics.cosine,
             payload_floats=jnp.mean(metrics.payload_floats),
             update_norm=flat.tree_norm(agg),
+            wire_bytes_up=jnp.float32(wire_bytes),
         )
         return FLState(new_params, ef_new, state.round + 1), rm
+
+    def _shard_fanout(client_fn, *, ef_pos, n_out, extra_in_axes=(),
+                      extra_specs=()):
+        """The ONE shard_map fan-out all four sharded variants share: vmap
+        the local clients inside the (HLO-gated) collective-free
+        ``CLIENT_SCOPE``, then ONE tiled all_gather of every output EXCEPT
+        the client-resident EF tree at ``ef_pos`` — the gathered operands
+        are the wire (full recon trees, (D_syn, s) payloads, or framed
+        uint8 buffers, depending on the variant)."""
+        in_axes = (None, 0, 0, 0) + extra_in_axes
+
+        def body(global_params, ef, batches, keys_, *extra):
+            with jax.named_scope(CLIENT_SCOPE):
+                outs = jax.vmap(client_fn, in_axes=in_axes)(
+                    global_params, ef, batches, keys_, *extra)
+            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
+            return tuple(
+                o if i == ef_pos else jax.tree_util.tree_map(gather, o)
+                for i, o in enumerate(outs))
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axes), P(axes), P(axes)) + extra_specs,
+            out_specs=tuple(P(axes) if i == ef_pos else P()
+                            for i in range(n_out)),
+            check_rep=False,
+        )
 
     def fl_round(state: FLState, client_batches: PyTree, key: jax.Array,
                  weights: jax.Array = None):
@@ -167,32 +234,57 @@ def make_fl_round(
             state.params, state.ef, client_batches, keys)
         return _server_step(state, recons, ef_new, losses, metrics, weights)
 
+    # ---- codec wire mode: only framed uint8 buffers cross the boundary ----
+
+    def one_client_wire(global_params, ef_i, batches_i, key_i, cid, rnd):
+        g, loss = local_train(loss_fn, global_params, batches_i,
+                              cfg.local_lr, num_micro=num_micro)
+        buf, ef_new, metrics = compressor.wire_step(
+            key_i, g, ef_i, global_params, codec=codec,
+            round_idx=rnd, client_idx=cid)
+        return buf, ef_new, loss, metrics
+
+    def _decode_recons(bufs, params):
+        """(N, nbytes) uint8 -> per-client reconstruction trees (server)."""
+        canon = jax.vmap(codec.decode)(bufs)
+        return jax.vmap(lambda c: codec.recon_tree(c, params))(canon)
+
+    def fl_round_wire(state: FLState, client_batches: PyTree, key: jax.Array,
+                      weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
+        bufs, ef_new, losses, metrics = jax.vmap(
+            one_client_wire, in_axes=(None, 0, 0, 0, 0, None))(
+            state.params, state.ef, client_batches, keys, cids, state.round)
+        recons = _decode_recons(bufs, state.params)
+        return _server_step(state, recons, ef_new, losses, metrics, weights,
+                            wire_bytes=codec.nbytes)
+
+    def fl_round_wire_shard(state: FLState, client_batches: PyTree,
+                            key: jax.Array, weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
+        # the wire: framed uint8 buffers only — N * codec.nbytes per round
+        bufs, ef_new, losses, metrics = _shard_fanout(
+            one_client_wire, ef_pos=1, n_out=4,
+            extra_in_axes=(0, None), extra_specs=(P(axes), P()))(
+            state.params, state.ef, client_batches, keys, cids, state.round)
+        recons = _decode_recons(bufs, state.params)
+        return _server_step(state, recons, ef_new, losses, metrics, weights,
+                            wire_bytes=codec.nbytes)
+
     def fl_round_shard(state: FLState, client_batches: PyTree, key: jax.Array,
                        weights: jax.Array = None):
         keys = jax.random.split(key, cfg.num_clients)
-
-        def body(global_params, ef, batches, keys_):
-            # per-client region: local clients only, NO collectives (gated)
-            with jax.named_scope(CLIENT_SCOPE):
-                recons, ef_new, losses, metrics = jax.vmap(
-                    one_client, in_axes=(None, 0, 0, 0))(
-                    global_params, ef, batches, keys_)
-            # the wire: one tiled gather per tree reassembles client order
-            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
-            recons = jax.tree_util.tree_map(gather, recons)
-            losses = gather(losses)
-            metrics = type(metrics)(*(gather(m) for m in metrics))
-            return recons, ef_new, losses, metrics
-
-        recons, ef_new, losses, metrics = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(), P(axes), P(axes), P(axes)),
-            out_specs=(P(), P(axes), P(), P()),
-            check_rep=False,
-        )(state.params, state.ef, client_batches, keys)
+        # the wire: the gathered recons are O(d) per device — FedAvg's bill
+        recons, ef_new, losses, metrics = _shard_fanout(
+            one_client, ef_pos=1, n_out=4)(
+            state.params, state.ef, client_batches, keys)
         return _server_step(state, recons, ef_new, losses, metrics, weights)
 
     if not fused_decode:
+        if wire == "codec":
+            return fl_round_wire if axes is None else fl_round_wire_shard
         return fl_round if axes is None else fl_round_shard
 
     assert syn_loss_fn is not None and syn_spec is not None, \
@@ -225,7 +317,8 @@ def make_fl_round(
             return x
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
 
-    def _fused_server_step(state, syns, ss, ef_new, losses, cosines):
+    def _fused_server_step(state, syns, ss, ef_new, losses, cosines,
+                           wire_bytes=0.0):
         """Shared fused server half: ONE replicated batched backward over
         the gathered (D_syn, s) payloads (identical on both fan-out paths)."""
         def total_loss(w):
@@ -242,6 +335,7 @@ def make_fl_round(
             # scalar, matching the default path's jnp.mean reduction
             payload_floats=jnp.float32(syn_spec.floats + 1),
             update_norm=flat.tree_norm(agg),
+            wire_bytes_up=jnp.float32(wire_bytes),
         )
         return FLState(new_params, ef_new, state.round + 1), rm
 
@@ -259,26 +353,60 @@ def make_fl_round(
     def fl_round_fused_shard(state: FLState, client_batches: PyTree,
                              key: jax.Array, weights: jax.Array = None):
         keys = jax.random.split(key, cfg.num_clients)
-
-        def body(global_params, ef, batches, keys_):
-            with jax.named_scope(CLIENT_SCOPE):
-                syns, ss, ef_new, losses, cosines = jax.vmap(
-                    one_client_fused, in_axes=(None, 0, 0, 0))(
-                    global_params, ef, batches, keys_)
-            # the wire: all-gather ONLY the (D_syn, s) payloads — O(N·payload)
-            # bytes, never the O(d) reconstruction trees
-            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
-            syns = jax.tree_util.tree_map(gather, syns)
-            return syns, gather(ss), ef_new, gather(losses), gather(cosines)
-
-        syns, ss, ef_new, losses, cosines = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(), P(axes), P(axes), P(axes)),
-            out_specs=(P(), P(), P(axes), P(), P()),
-            check_rep=False,
-        )(state.params, state.ef, client_batches, keys)
+        # the wire: all-gather ONLY the (D_syn, s) payloads — O(N·payload)
+        # bytes, never the O(d) reconstruction trees
+        syns, ss, ef_new, losses, cosines = _shard_fanout(
+            one_client_fused, ef_pos=2, n_out=5)(
+            state.params, state.ef, client_batches, keys)
         return _fused_server_step(state, syns, ss, ef_new, losses, cosines)
 
+    # ---- fused + codec wire: the gathered payload IS the encoded frame ----
+
+    def one_client_fused_wire(global_params, ef_i, batches_i, key_i, cid, rnd):
+        g, loss = local_train(loss_fn, global_params, batches_i,
+                              cfg.local_lr, num_micro=num_micro)
+        u = flat.tree_add(g, ef_i) if ccfg.error_feedback else g
+        syn0 = threesfc.init_syn(key_i, syn_spec)
+        res = threesfc.encode(syn_loss_fn, global_params, u, syn0,
+                              steps=ccfg.syn_steps, lr=ccfg.syn_lr,
+                              lam=ccfg.l2_coef)
+        buf = codec.encode((res.syn, res.s), round_idx=rnd, client_idx=cid)
+        ef_new = ops.tree_ef_update(u, res.gw, res.s) \
+            if ccfg.error_feedback else ef_i
+        return buf, ef_new, loss, res.cosine
+
+    def _decode_payloads(bufs):
+        """(N, nbytes) uint8 -> batched (D_syn, s) for the server backward."""
+        syns, ss = jax.vmap(codec.decode)(bufs)
+        return syns, ss
+
+    def fl_round_fused_wire(state: FLState, client_batches: PyTree,
+                            key: jax.Array, weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
+        bufs, ef_new, losses, cosines = jax.vmap(
+            one_client_fused_wire, in_axes=(None, 0, 0, 0, 0, None))(
+            state.params, state.ef, client_batches, keys, cids, state.round)
+        syns, ss = _decode_payloads(_replicate(bufs))
+        return _fused_server_step(state, syns, ss, ef_new, losses, cosines,
+                                  wire_bytes=codec.nbytes)
+
+    def fl_round_fused_wire_shard(state: FLState, client_batches: PyTree,
+                                  key: jax.Array, weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
+        # the wire: all-gather ONLY the framed (D_syn, s) bytes —
+        # O(N·nbytes), the paper's compressed uplink as measured bytes
+        bufs, ef_new, losses, cosines = _shard_fanout(
+            one_client_fused_wire, ef_pos=1, n_out=4,
+            extra_in_axes=(0, None), extra_specs=(P(axes), P()))(
+            state.params, state.ef, client_batches, keys, cids, state.round)
+        syns, ss = _decode_payloads(bufs)
+        return _fused_server_step(state, syns, ss, ef_new, losses, cosines,
+                                  wire_bytes=codec.nbytes)
+
+    if wire == "codec":
+        return fl_round_fused_wire if axes is None else fl_round_fused_wire_shard
     return fl_round_fused if axes is None else fl_round_fused_shard
 
 

@@ -1,0 +1,115 @@
+"""bitpack — 32→1 sign bit-packing kernel pair for the wire codec.
+
+``repro.comm`` serializes signSGD's uplink as an actual bit stream (the
+paper's "1 bit per coordinate" accounting, measured instead of assumed).
+The hot operation is packing ``d`` float signs into ``ceil(d/32)`` uint32
+words — a pure streaming transform, so it gets the same Pallas treatment as
+the reduction engine: one read of the float tile, one write of the 32×
+smaller word tile, no intermediate bool tensor in HBM.
+
+Layout: each kernel block reads ``(block_rows, 4096)`` f32 lanes and writes
+``(block_rows, 128)`` uint32 words — output lane ``w`` packs input lanes
+``[32w, 32w+32)`` LSB-first, so flat element ``n`` lands in word ``n // 32``
+bit ``n % 32``. Both tiles respect the (8, 128) f32/u32 TPU min-tile; off
+TPU the kernels run in interpret mode (``ops.on_tpu()`` convention).
+
+Sign convention (the wire contract, shared with ``comm.codec``): bit =
+``x >= 0``; unpacking yields ±1, never 0. Exact zeros therefore decode to
++1 — the codec documents this as the 1-bit wire semantics (a 3-valued sign
+does not fit in 1 bit; see ``comm.codec.SignCodec``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK_LANES = 4096                    # f32 lanes per packed row
+WORD_LANES = PACK_LANES // 32        # = 128, uint32 lanes per packed row
+BLOCK_ROWS = 8                       # f32/u32 min sublane tile
+
+
+def _pack_kernel(x_ref, out_ref):
+    x = x_ref[...]                                       # (br, 4096) f32
+    br = x.shape[0]
+    bits = (x >= 0).astype(jnp.uint32).reshape(br, WORD_LANES, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    out_ref[...] = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_kernel(w_ref, out_ref):
+    w = w_ref[...]                                       # (br, 128) uint32
+    br = w.shape[0]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (w[:, :, None] >> shifts) & jnp.uint32(1)
+    pm1 = bits.astype(jnp.float32) * 2.0 - 1.0
+    out_ref[...] = pm1.reshape(br, PACK_LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_signs_2d(x2: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(rows, 4096) f32 -> (rows, 128) uint32; bit = (x >= 0), LSB-first."""
+    rows = x2.shape[0]
+    assert rows % BLOCK_ROWS == 0 and x2.shape[1] == PACK_LANES, x2.shape
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, PACK_LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, WORD_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, WORD_LANES), jnp.uint32),
+        interpret=interpret,
+    )(x2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_signs_2d(w2: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(rows, 128) uint32 -> (rows, 4096) f32 in {-1, +1}."""
+    rows = w2.shape[0]
+    assert rows % BLOCK_ROWS == 0 and w2.shape[1] == WORD_LANES, w2.shape
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, WORD_LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, PACK_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, PACK_LANES), jnp.float32),
+        interpret=interpret,
+    )(w2)
+
+
+# ---------------------------------------------------------------------------
+# flat-vector wrappers (padding + interpret dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_signs(x: jax.Array) -> jax.Array:
+    """Flat f32 (n,) -> uint32 (ceil(n/32),) sign words.
+
+    The tail is padded with +1.0 (bit 1) up to the tile grid; padded bits
+    live only in the final word(s) the caller slices away by byte count.
+    """
+    n = x.size
+    words = -(-n // 32)
+    tile = BLOCK_ROWS * PACK_LANES
+    rows = max(1, -(-n // tile)) * BLOCK_ROWS
+    x2 = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, rows * PACK_LANES - n),
+                 constant_values=1.0).reshape(rows, PACK_LANES)
+    packed = pack_signs_2d(x2, interpret=_interpret())
+    return packed.reshape(-1)[:words]
+
+
+def unpack_signs(words: jax.Array, n: int) -> jax.Array:
+    """uint32 (ceil(n/32),) -> f32 (n,) in {-1, +1} (inverse of pack_signs)."""
+    w = words.size
+    assert w == -(-n // 32), (w, n)
+    tile = BLOCK_ROWS * WORD_LANES
+    rows = max(1, -(-w // tile)) * BLOCK_ROWS
+    w2 = jnp.pad(words.reshape(-1), (0, rows * WORD_LANES - w)) \
+        .reshape(rows, WORD_LANES)
+    pm1 = unpack_signs_2d(w2, interpret=_interpret())
+    return pm1.reshape(-1)[:n]

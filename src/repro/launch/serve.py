@@ -30,16 +30,18 @@ def main():
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    # independent streams: reusing one key for init AND data correlates the
+    # sampled prompt with the weights it is fed through
+    k_init, k_tok, k_frames = jax.random.split(jax.random.PRNGKey(args.seed), 3)
+    params = model.init(k_init)
+    tokens = jax.random.randint(k_tok, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
     cache_len = args.prompt_len + args.gen
 
     t0 = time.time()
     if isinstance(model, EncDec):
-        frames = jax.random.normal(key, (args.batch, cfg.num_mm_tokens,
-                                         cfg.d_model))
+        frames = jax.random.normal(k_frames, (args.batch, cfg.num_mm_tokens,
+                                              cfg.d_model))
         prefill = jax.jit(lambda p, f, t: model.prefill(p, f, t, cache_len))
         logits, cache, t = prefill(params, frames, tokens)
     else:

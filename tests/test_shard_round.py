@@ -29,6 +29,16 @@ def test_ef_sharding_roundtrip_through_donation(multidev_scenario):
     multidev_scenario("ef_donation")
 
 
+def test_shard_map_wire_mode_equals_vmap_float(multidev_scenario):
+    """wire='codec' on the sharded fan-out (only framed uint8 buffers cross
+    the shard_map boundary) over 3 scanned rounds: bitwise the vmap float
+    oracle for topk; signsgd bitwise its own vmap wire mode (the 1-bit wire
+    is fan-out-transparent); threesfc ≤1e-5 vs the vmap float oracle (the
+    server-side decode recompute is vmap-width-sensitive, like the fused
+    path)."""
+    multidev_scenario("wire")
+
+
 # ---------------------------------------------------------------------------
 # child scenarios (8 devices)
 # ---------------------------------------------------------------------------
@@ -54,7 +64,8 @@ def _world():
     parts = dirichlet_partition(train.y, N, alpha=0.5, seed=0,
                                 min_per_client=16)
 
-    def engine(ccfg, shardings=None, mode="vmap", mesh=None, donate=True):
+    def engine(ccfg, shardings=None, mode="vmap", mesh=None, donate=True,
+               wire="float"):
         spec = vision_syn_spec(MNIST_SPEC, ccfg)
         comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
                                local_lr=0.05)
@@ -63,9 +74,15 @@ def _world():
         pools = device_pools(parts)
         if shardings is not None:
             pools = shardings.place_pools(pools)
+        wire_kw = {}
+        if wire == "codec":
+            from repro.comm import make_codec
+            wire_kw = dict(wire="codec",
+                           codec=make_codec(ccfg, params, syn_spec=spec,
+                                            syn_loss_fn=model.syn_loss))
         eng = RoundEngine(
             make_fl_round(model.loss, comp, cfg, client_parallel=mode,
-                          mesh=mesh),
+                          mesh=mesh, **wire_kw),
             vision_batcher(train.x, train.y, pools, K, B),
             seed=0, donate=donate, shardings=shardings)
         return eng, eng.init_state(params, N)
@@ -259,10 +276,70 @@ def scenario_sharding_units():
     print("ok sharding_units")
 
 
+def scenario_wire():
+    import jax
+    import numpy as np
+
+    from repro.fl.sharding import make_fl_shardings
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    sh = make_fl_shardings(mesh)
+    _, engine, CompressorConfig = _world()
+
+    shared = ("loss", "cosine", "payload_floats", "update_norm")
+
+    # topk: the codec is lossless, so shard_map wire mode must be bitwise
+    # the vmap float oracle — transport AND serialization fully transparent
+    ccfg = CompressorConfig(kind="topk", keep_ratio=0.05)
+    ev, stv = engine(ccfg)
+    sv, mv = ev.run_block(stv, 3)
+    es, sts = engine(ccfg, sh, "shard_map", mesh, wire="codec")
+    ss, ms = es.run_block(sts, 3)
+    _tree_equal(sv.params, ss.params, "topk wire params")
+    _tree_equal(sv.ef, ss.ef, "topk wire ef")
+    for f in shared:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mv, f)), np.asarray(getattr(ms, f)),
+            err_msg=f"topk wire metric {f} not bit-exact")
+    assert float(np.asarray(ms.wire_bytes_up)[0]) > 0
+    print("ok topk")
+
+    # signsgd: the 1-bit wire diverges from the 3-valued float sign on exact
+    # zeros (documented), but must be fan-out-transparent: shard_map wire
+    # mode bitwise equals vmap wire mode
+    ccfg = CompressorConfig(kind="signsgd")
+    ev, stv = engine(ccfg, wire="codec")
+    sv, mv = ev.run_block(stv, 3)
+    es, sts = engine(ccfg, sh, "shard_map", mesh, wire="codec")
+    ss, ms = es.run_block(sts, 3)
+    _tree_equal(sv.params, ss.params, "signsgd wire params")
+    _tree_equal(sv.ef, ss.ef, "signsgd wire ef")
+    for f in shared:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mv, f)), np.asarray(getattr(ms, f)),
+            err_msg=f"signsgd wire metric {f} not bit-exact")
+    print("ok signsgd")
+
+    # threesfc: serialized (D_syn, s) frames cross the boundary; the server
+    # decode recompute is vmap-width-sensitive (like the fused path), so the
+    # 8-way mesh is pinned to the established 1e-5 tolerance
+    ccfg = CompressorConfig(kind="threesfc", syn_steps=2, syn_lr=0.1)
+    ev, stv = engine(ccfg)
+    sv, _ = ev.run_block(stv, 3)
+    es, sts = engine(ccfg, sh, "shard_map", mesh, wire="codec")
+    ss, _ = es.run_block(sts, 3)
+    for a, b in zip(jax.tree_util.tree_leaves(sv.params),
+                    jax.tree_util.tree_leaves(ss.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+    print("ok threesfc")
+
+
 SCENARIOS = {
     "bitexact": scenario_bitexact,
     "ef_donation": scenario_ef_donation,
     "sharding_units": scenario_sharding_units,
+    "wire": scenario_wire,
 }
 
 

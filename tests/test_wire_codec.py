@@ -1,0 +1,327 @@
+"""Wire codec round-trips: framed bytes in, bit-exact payloads out.
+
+Property-style sweeps (via the ``_hypo`` shim) over ragged pytrees whose
+total size is NOT divisible by 32, keep-budgets at both extremes
+(k = 1 and k = d), and all three dtype policies for the 3SFC payload —
+each in eager and jit. The contract under test is ``repro.comm.codec``'s:
+``decode(encode(wire))`` equals the canonical payload bitwise (canonical =
+after the policy cast; fp32 is strictly lossless), the decoded server
+reconstruction equals the client's dequantized view, and every buffer is
+self-describing through ``frame.parse_header``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.comm import InProcessChannel, make_codec, parse_header, wire_bytes
+from repro.comm.codec import (bytes_to_array, pack_uint_stream,
+                              unpack_uint_stream)
+from repro.configs.base import CompressorConfig
+from repro.core import flat, threesfc
+from repro.core.compressor import make_compressor
+from repro.kernels import bitpack
+
+
+def ragged_tree(seed: int, scale: float = 1.0):
+    """Total size 7 + 15 + 33 + 256 + 1 = 312... deliberately irregular:
+    scalars, odd vectors, matrices; d % 32 != 0."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    t = {
+        "a": scale * jax.random.normal(ks[0], (7,)),
+        "b": {"w": scale * jax.random.normal(ks[1], (3, 5)),
+              "c": scale * jax.random.normal(ks[2], (33,))},
+        "d": scale * jax.random.normal(ks[3], (128, 2)),
+        "s": scale * jax.random.normal(ks[4], ()),
+    }
+    # plant exact zeros (the signsgd 1-bit corner)
+    return jax.tree_util.tree_map(
+        lambda x: x.at[(0,) * x.ndim].set(0.0) if x.ndim else x, t)
+
+
+def tree_eq(a, b, msg=""):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+def roundtrip(cfg, params, u, *, jit: bool, policy=None, syn_spec=None,
+              syn_loss_fn=None):
+    comp = make_compressor(cfg, loss_fn=syn_loss_fn, syn_spec=syn_spec)
+    codec = make_codec(cfg, params, syn_spec=syn_spec,
+                       syn_loss_fn=syn_loss_fn, policy=policy)
+    out = comp.compress_tree(jax.random.PRNGKey(0), u, params)
+    enc = (lambda w: codec.encode(w, round_idx=5, client_idx=2))
+    dec = codec.decode
+    if jit:
+        enc, dec = jax.jit(enc), jax.jit(dec)
+    buf = enc(out.wire)
+    assert buf.dtype == jnp.uint8 and buf.shape == (codec.nbytes,)
+    # static-size function agrees with the actual buffer
+    assert wire_bytes(cfg, params, syn_spec=syn_spec,
+                      policy=policy) == codec.nbytes
+    hdr = parse_header(np.asarray(buf))
+    assert hdr["kind"] == cfg.kind and hdr["round"] == 5 \
+        and hdr["client"] == 2
+    assert hdr["nbytes"] == codec.nbytes
+    return codec, out, dec(buf)
+
+
+# ---------------------------------------------------------------------------
+# bit-stream primitives
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200), st.integers(1, 20))
+def test_uint_stream_roundtrip(seed, k, width):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.integers(0, 2**width, size=k, dtype=np.uint32))
+    b = pack_uint_stream(vals, width)
+    assert b.size == -(-k * width // 8)
+    back = unpack_uint_stream(b, k, width)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 31, 32, 33, 311, 5000]))
+def test_bitpack_kernel_roundtrip(seed, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    x = x.at[0].set(0.0)
+    words = bitpack.pack_signs(x)
+    assert words.shape == (-(-n // 32),) and words.dtype == jnp.uint32
+    back = bitpack.unpack_signs(words, n)
+    ref = np.where(np.asarray(x) >= 0, 1.0, -1.0).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(back), ref)
+    # jit + vmap
+    f = jax.jit(jax.vmap(lambda v: bitpack.unpack_signs(
+        bitpack.pack_signs(v), n)))
+    np.testing.assert_array_equal(np.asarray(f(x[None])[0]), ref)
+
+
+def test_bytes_to_array_empty_and_scalar():
+    assert bytes_to_array(jnp.zeros((0,), jnp.uint8), (0, 0)).shape == (0, 0)
+    s = bytes_to_array(
+        jax.lax.bitcast_convert_type(jnp.float32(3.5), jnp.uint8), ())
+    assert float(s) == 3.5
+
+
+# ---------------------------------------------------------------------------
+# baseline codecs over ragged trees (d % 32 != 0), eager + jit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("jit", [False, True], ids=["eager", "jit"])
+@pytest.mark.parametrize("kind", ["identity", "topk", "signsgd", "stc"])
+def test_baseline_codecs_bitexact(kind, jit):
+    params = ragged_tree(0)
+    u = ragged_tree(1)
+    cfg = CompressorConfig(kind=kind, keep_ratio=0.1)
+    codec, out, canon = roundtrip(cfg, params, u, jit=jit)
+    # canonical payload round-trips bitwise
+    ref = codec.decode(codec.encode(out.wire))
+    tree_eq(canon, ref, f"{kind} canonical payload not bit-exact")
+    # decoded server recon == client dequantized view, bitwise
+    recon_cli, direction, scale = codec.client_view(out)
+    assert direction is None
+    tree_eq(codec.recon_tree(canon, params), recon_cli,
+            f"{kind} decoded recon != client view")
+    # lossless codecs reproduce the float-path recon exactly
+    if kind in ("identity", "topk"):
+        tree_eq(recon_cli, out.recon)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["topk", "stc"]))
+def test_keep_budget_extremes(seed, kind):
+    """k = 1 (ratio -> 0) and k = d (ratio = 1) per leaf, bit-exact."""
+    params = ragged_tree(seed)
+    u = ragged_tree(seed + 1)
+    for ratio in (1e-9, 1.0):
+        cfg = CompressorConfig(kind=kind, keep_ratio=ratio)
+        codec, out, canon = roundtrip(cfg, params, u, jit=False)
+        recon_cli, _, _ = codec.client_view(out)
+        tree_eq(codec.recon_tree(canon, params), recon_cli)
+        if ratio == 1.0 and kind == "topk":
+            # full keep must reproduce u itself
+            tree_eq(recon_cli, u)
+
+
+def test_signsgd_one_bit_convention():
+    """Exact zeros decode to +scale — the documented 1-bit semantics —
+    and everything else matches the float path bitwise."""
+    params = ragged_tree(0)
+    u = ragged_tree(3)
+    cfg = CompressorConfig(kind="signsgd")
+    codec, out, canon = roundtrip(cfg, params, u, jit=False)
+    recon = codec.recon_tree(canon, params)
+    for lu, lr, lf in zip(jax.tree_util.tree_leaves(u),
+                          jax.tree_util.tree_leaves(recon),
+                          jax.tree_util.tree_leaves(out.recon)):
+        lu, lr, lf = map(np.asarray, (lu, lr, lf))
+        nz = lu != 0.0
+        np.testing.assert_array_equal(lr[nz], lf[nz])
+        if (~nz).any():
+            scale = np.abs(lu).mean(dtype=np.float32)
+            assert (lr[~nz] > 0).all()      # zeros -> +scale
+            np.testing.assert_allclose(lr[~nz], scale, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 3SFC payload: all three dtype policies, eager + jit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("jit", [False, True], ids=["eager", "jit"])
+@pytest.mark.parametrize("policy", ["fp32", "fp16", "bf16"])
+def test_threesfc_policies_bitexact(policy, jit):
+    spec = threesfc.SynSpec(x_shape=(1, 5, 3), num_classes=7)
+    syn = threesfc.init_syn(jax.random.PRNGKey(0), spec)
+    s = jnp.float32(0.37)
+    params = ragged_tree(0)
+    cfg = CompressorConfig(kind="threesfc")
+    codec = make_codec(cfg, params, syn_spec=spec, policy=policy)
+    enc = (lambda w: codec.encode(w))
+    dec = codec.decode
+    if jit:
+        enc, dec = jax.jit(enc), jax.jit(dec)
+    syn2, s2 = dec(enc((syn, s)))
+    # canonical = cast to the policy dtype and back: bit-exact at that level
+    from repro.comm.codec import POLICY_DTYPES
+    dt = POLICY_DTYPES[policy]
+    want = threesfc.SynData(*[jnp.asarray(a, dt).astype(jnp.float32)
+                              for a in syn])
+    tree_eq((syn2, s2), (want, s), f"threesfc {policy} round trip")
+    # s is always f32, policy notwithstanding
+    assert np.asarray(s2) == np.float32(0.37)
+    # fp16/bf16 payloads are exactly half the fp32 stream
+    if policy != "fp32":
+        full = make_codec(cfg, params, syn_spec=spec, policy="fp32")
+        assert (codec.nbytes - codec.header_bytes - 4) * 2 \
+            == (full.nbytes - full.header_bytes - 4)
+
+
+def test_threesfc_low_rank_labels_roundtrip():
+    spec = threesfc.SynSpec(x_shape=(2, 4, 3), num_classes=11, label_rank=2)
+    syn = threesfc.init_syn(jax.random.PRNGKey(1), spec)
+    cfg = CompressorConfig(kind="threesfc")
+    params = ragged_tree(0)
+    codec = make_codec(cfg, params, syn_spec=spec)
+    syn2, s2 = codec.decode(codec.encode((syn, jnp.float32(1.5))))
+    tree_eq(syn2, syn)
+    assert float(s2) == 1.5
+
+
+# ---------------------------------------------------------------------------
+# frame + channel + registry edges
+# ---------------------------------------------------------------------------
+
+
+def test_frame_rejects_garbage():
+    params = ragged_tree(0)
+    cfg = CompressorConfig(kind="identity", error_feedback=False)
+    codec = make_codec(cfg, params)
+    comp = make_compressor(cfg)
+    out = comp.compress_tree(jax.random.PRNGKey(0), ragged_tree(1), params)
+    buf = np.asarray(codec.encode(out.wire))
+    with pytest.raises(ValueError, match="magic"):
+        parse_header(np.roll(buf, 1))
+    with pytest.raises(ValueError, match="short"):
+        parse_header(buf[:8])
+    with pytest.raises(ValueError, match="frame says"):
+        parse_header(buf[:-1])
+    bad = buf.copy()
+    bad[2] = 99
+    with pytest.raises(ValueError, match="version"):
+        parse_header(bad)
+
+
+def test_channel_bills_only_frames():
+    ch = InProcessChannel()
+    ch.begin_round()
+    with pytest.raises(TypeError, match="uint8"):
+        ch.send_up(jnp.zeros((4,), jnp.float32))
+    got = ch.send_up(jnp.arange(10, dtype=jnp.uint8))
+    assert isinstance(got, np.ndarray) and got.nbytes == 10
+    ch.send_down(jnp.zeros((6,), jnp.uint8))
+    ch.begin_round()
+    ch.send_up(jnp.zeros((3,), jnp.uint8))
+    assert ch.uplink.per_round == [10, 3]
+    assert ch.downlink.per_round == [6, 0]
+    assert ch.uplink.total_bytes == 13 and ch.uplink.messages == 2
+
+
+def test_unregistered_kinds_raise():
+    params = ragged_tree(0)
+    with pytest.raises(KeyError, match="randk"):
+        make_codec(CompressorConfig(kind="randk"), params)
+    with pytest.raises(KeyError, match="fedsynth"):
+        make_codec(CompressorConfig(kind="fedsynth"), params)
+
+
+# ---------------------------------------------------------------------------
+# one whole wire-mode round == float round (vmap, tiny model)
+# ---------------------------------------------------------------------------
+
+
+def test_fl_round_wire_matches_float():
+    from repro.configs.base import FLConfig
+    from repro.fl.round import fl_init, make_fl_round
+    from repro.models.cnn import VisionSpec, make_paper_model
+
+    spec = VisionSpec("tiny", (4, 4, 1), 3)
+    model = make_paper_model("mlp", spec)
+    params = model.init(jax.random.PRNGKey(0))
+    ccfg = CompressorConfig(kind="topk", keep_ratio=0.05)
+    cfg = FLConfig(num_clients=2, local_steps=1, local_lr=0.05,
+                   local_batch=4, compressor=ccfg)
+    comp = make_compressor(ccfg)
+    codec = make_codec(ccfg, params)
+    batches = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (2, 1, 4, 4, 4, 1)),
+        "y": jax.random.randint(jax.random.PRNGKey(2), (2, 1, 4), 0, 3),
+    }
+    state = fl_init(params, 2)
+    key = jax.random.PRNGKey(3)
+    s1, m1 = jax.jit(make_fl_round(model.loss, comp, cfg))(
+        state, batches, key)
+    s2, m2 = jax.jit(make_fl_round(model.loss, comp, cfg, wire="codec",
+                                   codec=codec))(state, batches, key)
+    tree_eq(s1.params, s2.params)
+    tree_eq(s1.ef, s2.ef)
+    for f in ("loss", "cosine", "payload_floats", "update_norm"):
+        np.testing.assert_array_equal(np.asarray(getattr(m1, f)),
+                                      np.asarray(getattr(m2, f)))
+    assert float(m1.wire_bytes_up) == 0.0
+    assert float(m2.wire_bytes_up) == codec.nbytes
+
+
+def test_wire_mode_rejects_bad_pairs():
+    from repro.configs.base import FLConfig
+    from repro.fl.round import make_fl_round
+    from repro.models.cnn import VisionSpec, make_paper_model
+
+    spec = VisionSpec("tiny", (4, 4, 1), 3)
+    model = make_paper_model("mlp", spec)
+    params = model.init(jax.random.PRNGKey(0))
+    ccfg = CompressorConfig(kind="topk", keep_ratio=0.05)
+    cfg = FLConfig(num_clients=2, compressor=ccfg)
+    comp = make_compressor(ccfg)
+    with pytest.raises(ValueError, match="requires a codec"):
+        make_fl_round(model.loss, comp, cfg, wire="codec")
+    with pytest.raises(ValueError, match="does not match"):
+        make_fl_round(model.loss, comp, cfg, wire="codec",
+                      codec=make_codec(CompressorConfig(kind="signsgd"),
+                                       params))
+    with pytest.raises(ValueError, match="'float' or 'codec'"):
+        make_fl_round(model.loss, comp, cfg, wire="bytes")
+    tcfg = CompressorConfig(kind="threesfc")
+    tfl = FLConfig(num_clients=2, compressor=tcfg)
+    tspec = threesfc.SynSpec(x_shape=(1, 4, 4, 1), num_classes=3)
+    tcomp = make_compressor(tcfg, loss_fn=model.syn_loss, syn_spec=tspec)
+    with pytest.raises(ValueError, match="fp32"):
+        make_fl_round(model.loss, tcomp, tfl, wire="codec",
+                      codec=make_codec(tcfg, params, syn_spec=tspec,
+                                       policy="bf16"))
