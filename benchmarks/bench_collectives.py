@@ -68,13 +68,14 @@ def _child() -> Dict:
     import numpy as np
 
     from repro.configs.base import CompressorConfig, FLConfig
+    from repro.configs.run import RunConfig
     from repro.core import flat
-    from repro.core.compressor import make_compressor
+    from repro.core.strategy import make_strategy
     from repro.data.partition import dirichlet_partition
     from repro.data.synthetic import make_class_image_dataset
     from repro.fl.budget import matched_compressors
     from repro.fl.engine import RoundEngine, device_pools, vision_batcher
-    from repro.fl.round import CLIENT_SCOPE, fl_init, make_fl_round
+    from repro.fl.round import CLIENT_SCOPE, build_fl_round, fl_init
     from repro.fl.sharding import make_fl_shardings
     from repro.models.build import vision_syn_spec
     from repro.models.cnn import MNIST_SPEC, make_paper_model
@@ -98,15 +99,14 @@ def _child() -> Dict:
     ccfg = matched_compressors("mlp", MNIST_SPEC, d)["threesfc"]
     spec = vision_syn_spec(MNIST_SPEC, ccfg)
     payload_floats = float(spec.floats + 1)
-    comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
-                           local_lr=0.01)
+    strat = make_strategy(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                          local_lr=0.01)
     cfg = FLConfig(num_clients=N_CLIENTS, local_steps=LOCAL_STEPS,
                    local_lr=0.01, local_batch=LOCAL_BATCH, compressor=ccfg)
-    naive_rf = make_fl_round(model.loss, comp, cfg,
-                             client_parallel="shard_map", mesh=mesh)
-    fused_rf = make_fl_round(model.loss, comp, cfg, fused_decode=True,
-                             syn_loss_fn=model.syn_loss, syn_spec=spec,
-                             client_parallel="shard_map", mesh=mesh)
+    run_sh = RunConfig(fl=cfg, client_parallel="shard_map", mesh=mesh)
+    naive_rf = build_fl_round(model.loss, strat, run_sh)
+    fused_rf = build_fl_round(model.loss, strat,
+                              run_sh.replace(fused_decode=True))
 
     state = fl_init(params, N_CLIENTS)
     batches = {
@@ -158,16 +158,16 @@ def _child() -> Dict:
 
     def engine_for(kcfg, shardings, mode, m):
         kspec = vision_syn_spec(MNIST_SPEC, kcfg)
-        kcomp = make_compressor(kcfg, loss_fn=model.syn_loss, syn_spec=kspec,
-                                local_lr=0.05)
+        kstrat = make_strategy(kcfg, loss_fn=model.syn_loss, syn_spec=kspec,
+                               local_lr=0.05)
         kfl = FLConfig(num_clients=EN, local_steps=EK, local_lr=0.05,
                        local_batch=EB, compressor=kcfg)
         pools = device_pools(parts)
         if shardings is not None:
             pools = shardings.place_pools(pools)
         eng = RoundEngine(
-            make_fl_round(model.loss, kcomp, kfl, client_parallel=mode,
-                          mesh=m),
+            build_fl_round(model.loss, kstrat,
+                           RunConfig(fl=kfl, client_parallel=mode, mesh=m)),
             vision_batcher(train.x, train.y, pools, EK, EB),
             seed=0, shardings=shardings)
         return eng, eng.init_state(params, EN)

@@ -45,12 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.compressor import make_compressor
+from repro.configs.run import RunConfig
+from repro.core.strategy import make_strategy
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset
 from repro.fl.budget import matched_compressors
 from repro.fl.engine import RoundEngine, device_pools, vision_batcher
-from repro.fl.round import FLState, RoundMetrics, make_fl_round
+from repro.fl.round import FLState, RoundMetrics, build_fl_round
 from repro.models.build import vision_syn_spec
 from repro.models.cnn import MNIST_SPEC, make_paper_model
 
@@ -193,12 +194,12 @@ def run(quick: bool = True, out_dir: str = "experiments/results") -> Dict:
     results["e2e"] = {}
     for kind in kinds:
         comp = comps[kind]
-        compressor = make_compressor(comp, loss_fn=model.syn_loss,
-                                     syn_spec=vision_syn_spec(MNIST_SPEC, comp),
-                                     local_lr=0.01)
+        strategy = make_strategy(comp, loss_fn=model.syn_loss,
+                                 syn_spec=vision_syn_spec(MNIST_SPEC, comp),
+                                 local_lr=0.01)
         cfg = FLConfig(num_clients=N_CLIENTS, local_steps=LOCAL_STEPS,
                        local_lr=0.01, local_batch=LOCAL_BATCH, compressor=comp)
-        rf = make_fl_round(model.loss, compressor, cfg)
+        rf = build_fl_round(model.loss, strategy, RunConfig(fl=cfg))
         e_pairs = (3 if kind == "fedavg" else 1) * (1 if quick else 2)
         eng2 = RoundEngine(rf, batch_fn, seed=0)
         results["e2e"][kind] = _paired_measure(

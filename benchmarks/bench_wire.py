@@ -67,9 +67,9 @@ def _tree_maxdiff(a, b) -> float:
 
 def _measure(model, params, d, kinds, syn_specs) -> Dict:
     """Serialize one realistic client update per method and measure it."""
-    from repro.comm import InProcessChannel, make_codec, parse_header
+    from repro.comm import InProcessChannel, parse_header
     from repro.core import flat
-    from repro.core.compressor import make_compressor
+    from repro.core.strategy import make_strategy
     from repro.data.synthetic import make_class_image_dataset
     from repro.fl.client import local_train
     from repro.models.cnn import MNIST_SPEC
@@ -84,11 +84,10 @@ def _measure(model, params, d, kinds, syn_specs) -> Dict:
     per_method: Dict[str, Dict] = {}
     for name, ccfg in kinds.items():
         spec = syn_specs[name]
-        comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
-                               local_lr=0.01)
-        codec = make_codec(ccfg, params, syn_spec=spec,
-                           syn_loss_fn=model.syn_loss)
-        out = comp.compress_tree(jax.random.PRNGKey(13), u, params)
+        strat = make_strategy(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                              local_lr=0.01)
+        codec = strat.wire_codec(params)
+        out = strat.client_encode(jax.random.PRNGKey(13), u, params)
         buf = jax.jit(lambda w: codec.encode(w, round_idx=3, client_idx=1))(
             out.wire)
         hdr = parse_header(np.asarray(buf))
@@ -116,7 +115,7 @@ def _measure(model, params, d, kinds, syn_specs) -> Dict:
             recon_diff = _tree_maxdiff(recon_cli, recon_dec)
             recon_ok = _tree_equal(recon_cli, recon_dec)
 
-        accounted_floats = comp.payload_floats(params)
+        accounted_floats = strat.payload_floats(params)
         # stc shares signsgd's 1-bit sign semantics: a kept value that is
         # exactly zero would decode to +mu where the float path writes 0.
         # Count them so a future parity divergence is attributable (today:
@@ -146,12 +145,10 @@ def _measure(model, params, d, kinds, syn_specs) -> Dict:
     # the channel bills exactly one frame per client
     ch = InProcessChannel()
     ch.begin_round()
-    codec = make_codec(kinds["threesfc"], params,
-                       syn_spec=syn_specs["threesfc"],
-                       syn_loss_fn=model.syn_loss)
-    comp = make_compressor(kinds["threesfc"], loss_fn=model.syn_loss,
-                           syn_spec=syn_specs["threesfc"], local_lr=0.01)
-    out = comp.compress_tree(jax.random.PRNGKey(14), u, params)
+    strat = make_strategy(kinds["threesfc"], loss_fn=model.syn_loss,
+                          syn_spec=syn_specs["threesfc"], local_lr=0.01)
+    codec = strat.wire_codec(params)
+    out = strat.client_encode(jax.random.PRNGKey(14), u, params)
     for c in range(N_CLIENTS):
         ch.send_up(codec.encode(out.wire, round_idx=0, client_idx=c))
     channel = {
@@ -168,13 +165,13 @@ def _measure(model, params, d, kinds, syn_specs) -> Dict:
 
 def _parity(model, params, kinds, syn_specs) -> Dict:
     """wire='codec' engine rounds vs the float oracle, 3 scanned rounds."""
-    from repro.comm import make_codec
     from repro.configs.base import FLConfig
-    from repro.core.compressor import make_compressor
+    from repro.configs.run import RunConfig
+    from repro.core.strategy import make_strategy
     from repro.data.partition import dirichlet_partition
     from repro.data.synthetic import make_class_image_dataset
     from repro.fl.engine import RoundEngine, device_pools, vision_batcher
-    from repro.fl.round import make_fl_round
+    from repro.fl.round import build_fl_round
     from repro.models.cnn import MNIST_SPEC
 
     train = make_class_image_dataset(jax.random.PRNGKey(1), 400,
@@ -183,20 +180,14 @@ def _parity(model, params, kinds, syn_specs) -> Dict:
                                 min_per_client=16)
 
     def run3(ccfg, spec, wire, fused=False):
-        comp = make_compressor(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
-                               local_lr=0.05)
+        strat = make_strategy(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                              local_lr=0.05)
         cfg = FLConfig(num_clients=N_CLIENTS, local_steps=PARITY_K,
                        local_lr=0.05, local_batch=PARITY_B, compressor=ccfg)
-        kw = {}
-        if wire == "codec":
-            kw = dict(wire="codec",
-                      codec=make_codec(ccfg, params, syn_spec=spec,
-                                       syn_loss_fn=model.syn_loss))
-        if fused:
-            kw.update(fused_decode=True, syn_loss_fn=model.syn_loss,
-                      syn_spec=spec)
+        run = RunConfig(fl=cfg, wire=wire, fused_decode=fused)
+        codec = strat.wire_codec(params) if wire == "codec" else None
         eng = RoundEngine(
-            make_fl_round(model.loss, comp, cfg, **kw),
+            build_fl_round(model.loss, strat, run, codec=codec),
             vision_batcher(train.x, train.y, device_pools(parts),
                            PARITY_K, PARITY_B), seed=0)
         return eng.run_block(eng.init_state(params, N_CLIENTS), PARITY_ROUNDS)

@@ -26,15 +26,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CompressorConfig, FLConfig
+from repro.configs.run import RunConfig
 from repro.core.baselines import compression_rate_bytes
-from repro.core.compressor import make_compressor
+from repro.core.strategy import make_strategy
 from repro.core import flat
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset
 from repro.fl.budget import (matched_compressors, measured_wire_bytes,
                              payload_budget)
 from repro.fl.engine import RoundEngine, device_pools, vision_batcher
-from repro.fl.round import make_fl_round
+from repro.fl.round import build_fl_round
 from repro.models.build import vision_syn_spec
 from repro.models.cnn import DATASETS, accuracy, make_paper_model
 
@@ -90,8 +91,6 @@ def run_fl(
     uint8 buffers cross the client/server boundary; see repro.comm) —
     bit-identical to float mode for every lossless codec, and the measured
     ``wire_bytes`` column is filled either way."""
-    if wire not in ("float", "codec"):
-        raise ValueError(f"wire must be 'float' or 'codec', got {wire!r}")
     t_start = time.time()
     spec = DATASETS[dataset]
     key = jax.random.PRNGKey(seed)
@@ -108,23 +107,19 @@ def run_fl(
     params = model.init(km)
     d = flat.tree_size(params)
     syn_spec = vision_syn_spec(spec, comp)
-    compressor = make_compressor(comp, loss_fn=model.syn_loss,
-                                 syn_spec=syn_spec, local_lr=local_lr)
+    strategy = make_strategy(comp, loss_fn=model.syn_loss,
+                             syn_spec=syn_spec, local_lr=local_lr)
     fl_cfg = FLConfig(num_clients=num_clients, local_steps=local_steps,
                       local_lr=local_lr, local_batch=local_batch,
                       compressor=comp, seed=seed)
-    round_kw = {}
-    if wire == "codec":
-        from repro.comm import make_codec
-        round_kw = dict(wire="codec",
-                        codec=make_codec(comp, params, syn_spec=syn_spec,
-                                         syn_loss_fn=model.syn_loss))
+    run = RunConfig(fl=fl_cfg, wire=wire)   # validates the wire value too
+    codec = strategy.wire_codec(params) if run.wire == "codec" else None
     engine = RoundEngine(
-        make_fl_round(model.loss, compressor, fl_cfg, **round_kw),
+        build_fl_round(model.loss, strategy, run, codec=codec),
         vision_batcher(train.x, train.y, device_pools(parts),
                        local_steps, local_batch),
         seed=seed)
-    state = engine.init_state(params, num_clients)
+    state = engine.init_state(params, num_clients, strategy)
 
     test_x = jnp.asarray(test.x)
     test_y = jnp.asarray(test.y)
@@ -133,7 +128,7 @@ def run_fl(
     def eval_acc(p):
         return accuracy(model.apply(p, test_x), test_y)
 
-    payload = compressor.payload_floats(params)
+    payload = strategy.payload_floats(params)
 
     state, hist = engine.run(state, rounds, eval_every=eval_every,
                              eval_fn=lambda st, ms, r: float(eval_acc(st.params)))

@@ -38,7 +38,21 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--strategies", action="store_true",
+                    help="list the registered compression strategies (and "
+                         "which have a wire codec) instead of running")
     args = ap.parse_args(argv)
+    if args.strategies:
+        from repro.comm.codec import CODECS
+        from repro.core.strategy import STRATEGIES, strategy_kinds
+        for kind in strategy_kinds():
+            cls = STRATEGIES[kind]
+            tags = [t for t, on in (
+                ("fused-aggregate", cls.supports_fused_aggregate),
+                ("wire-codec", kind in CODECS)) if on]
+            print(f"{kind:12s} {cls.__module__}.{cls.__name__}"
+                  + (f"  [{', '.join(tags)}]" if tags else ""))
+        return
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

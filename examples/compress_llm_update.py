@@ -3,10 +3,11 @@
     PYTHONPATH=src python examples/compress_llm_update.py [--arch tinyllama-1.1b]
 
 The paper compresses CNN/MLP updates on image classifiers. Here the same
-compressor runs on a (reduced) assigned LLM architecture: the synthetic
-payload is soft input EMBEDDINGS + LOW-RANK soft labels over the vocab —
-the generalization DESIGN.md §5 describes. Works for every family,
-including MoE (EF carries non-activated experts) and SSM.
+registered strategy (``repro.core.strategy``) runs on a (reduced) assigned
+LLM architecture: the synthetic payload is soft input EMBEDDINGS + LOW-RANK
+soft labels over the vocab — the generalization DESIGN.md §5 describes.
+Works for every family, including MoE (EF carries non-activated experts)
+and SSM.
 """
 import argparse
 
@@ -15,17 +16,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, CompressorConfig, get_smoke_config
-from repro.core import flat, threesfc
+from repro.core import flat
+from repro.core.strategy import make_strategy
 from repro.data.synthetic import make_token_dataset
 from repro.models.build import build_model, syn_loss_fn, syn_spec_for
 from repro.models.encdec import EncDec
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
     ap.add_argument("--steps", type=int, default=10)
-    args = ap.parse_args()
+    ap.add_argument("--local-iters", type=int, default=3)
+    args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
@@ -44,26 +47,28 @@ def main():
 
     # accumulate a local update
     wi = w
-    for _ in range(3):
+    for _ in range(args.local_iters):
         g = jax.grad(model.loss)(wi, batch)
         wi = jax.tree.map(lambda p, gr: p - 0.01 * gr, wi, g)
     target = flat.tree_sub(w, wi)
 
     comp = CompressorConfig(kind="threesfc", syn_batch=1, syn_seq=8,
-                            soft_label_rank=8, syn_steps=args.steps, syn_lr=0.1)
+                            soft_label_rank=8, syn_steps=args.steps,
+                            syn_lr=0.1)
     spec = syn_spec_for(cfg, comp)
-    syn0 = threesfc.init_syn(jax.random.PRNGKey(2), spec)
-    lf = syn_loss_fn(model)
-    enc = threesfc.encode(lf, w, target, syn0, steps=args.steps, lr=0.1)
-    recon = threesfc.decode(lf, w, enc.syn, enc.s)
+    strategy = make_strategy(comp, loss_fn=syn_loss_fn(model), syn_spec=spec)
+    enc = strategy.client_encode(jax.random.PRNGKey(2), target, w)
+    recon = strategy.server_decode(enc.wire, w)
     err = float(flat.tree_norm(flat.tree_sub(recon, enc.recon)))
 
     print(f"arch={args.arch}  params={d:,}")
-    print(f"payload = {spec.floats + 1:.0f} floats "
+    print(f"payload = {strategy.payload_floats(w):.0f} floats "
           f"(soft embeds {np.prod(spec.x_shape)}, low-rank labels rank "
-          f"{comp.soft_label_rank}) -> {(d / (spec.floats + 1)):.1f}x compression")
+          f"{comp.soft_label_rank}) -> "
+          f"{d / strategy.payload_floats(w):.1f}x compression")
     print(f"encode cosine = {float(enc.cosine):+.4f}  "
           f"(decode exactness: {err:.2e})")
+    return err
 
 
 if __name__ == "__main__":

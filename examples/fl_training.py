@@ -1,26 +1,37 @@
 """End-to-end FL training: 20 non-iid clients, 3SFC at 250x compression,
 a few hundred rounds of MLP training with live accuracy.
 
-    PYTHONPATH=src python examples/fl_training.py [--rounds 200]
+    PYTHONPATH=src python examples/fl_training.py [--rounds 200] [--wire codec]
 
 This is the end-to-end driver deliverable (examples category b): the full
 stack — data synthesis, Dirichlet partition, vmapped clients, EF-compressed
-uplink, server aggregation, eval, checkpointing.
+uplink (serialized uint8 frames with ``--wire codec``), server aggregation,
+eval, checkpointing — driven through ``repro.launch.train``'s
+``RunConfig``-based CLI.
 """
 import argparse
 
 from repro.launch.train import main as train_main
-import sys
 
 
-if __name__ == "__main__":
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--compressor", default="threesfc")
-    args = ap.parse_args()
-    sys.argv = ["train", "--model", "mlp", "--dataset", "mnist",
-                "--compressor", args.compressor,
+    ap.add_argument("--wire", default="float", choices=["float", "codec"])
+    ap.add_argument("--train-size", type=int, default=4000)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--out", default="experiments/example_fl_run")
+    args = ap.parse_args(argv)
+    train_main(["--model", "mlp", "--dataset", "mnist",
+                "--compressor", args.compressor, "--wire", args.wire,
                 "--rounds", str(args.rounds), "--clients", str(args.clients),
-                "--eval-every", "10", "--out", "experiments/example_fl_run"]
-    train_main()
+                "--train-size", str(args.train_size),
+                "--batch", str(args.batch),
+                "--eval-every", str(args.eval_every), "--out", args.out])
+
+
+if __name__ == "__main__":
+    main()

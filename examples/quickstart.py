@@ -2,58 +2,92 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper end to end on one client: train locally for K steps, encode
-the accumulated update into ONE synthetic sample + one scalar (795+1 floats
-against 199,210 gradient entries -> the paper's 250x ratio), ship it, decode
-on the server with one backward pass, apply.
+Walks the paper end to end on one client through the ``CompressionStrategy``
+API (``repro.core.strategy``): train locally for K steps, encode the
+accumulated update into ONE synthetic sample + one scalar (795+1 floats
+against 199,210 gradient entries -> the paper's 250x ratio), serialize it
+into the method's wire frame, decode on the server with one backward pass,
+apply. Swapping ``kind="threesfc"`` for any registered kind
+(``strategy_kinds()``) swaps the whole method — encoder, decoder, codec and
+accounting travel together on the strategy object.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import CompressorConfig
-from repro.core import baselines, flat, threesfc
+from repro.core import baselines, flat
+from repro.core.strategy import make_strategy
 from repro.data.synthetic import make_class_image_dataset
 from repro.models.build import vision_syn_spec
 from repro.models.cnn import MNIST_SPEC, accuracy, make_paper_model
 
-key = jax.random.PRNGKey(0)
-model = make_paper_model("mlp", MNIST_SPEC)          # 199,210 params (paper Fig. 1)
-w_global = model.init(key)
-ds = make_class_image_dataset(jax.random.PRNGKey(1), 512, (28, 28, 1), 10)
 
-# --- client: K=5 local SGD steps --------------------------------------------
-w = w_global
-for i in range(5):
-    batch = {"x": jnp.asarray(ds.x[i * 64:(i + 1) * 64]),
-             "y": jnp.asarray(ds.y[i * 64:(i + 1) * 64])}
-    g = jax.grad(model.loss)(w, batch)
-    w = jax.tree.map(lambda p, gr: p - 0.05 * gr, w, g)
-g_accum = flat.tree_sub(w_global, w)                 # g = w^t - w_i^t (Eq. 3)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train-size", type=int, default=512)
+    ap.add_argument("--test-size", type=int, default=400)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--syn-steps", type=int, default=10)
+    args = ap.parse_args(argv)
 
-# --- client: 3SFC encode (Eq. 8/9) ------------------------------------------
-comp = CompressorConfig(kind="threesfc", syn_batch=1, syn_steps=10, syn_lr=0.1)
-spec = vision_syn_spec(MNIST_SPEC, comp)
-syn0 = threesfc.init_syn(jax.random.PRNGKey(2), spec)
-enc = threesfc.encode(model.syn_loss, w_global, g_accum, syn0,
-                      steps=comp.syn_steps, lr=comp.syn_lr)
-d = flat.tree_size(w_global)
-print(f"uplink payload: {spec.floats + 1:.0f} floats vs {d:,} gradient entries "
-      f"-> {(d / (spec.floats + 1)):.1f}x compression (paper: 250.6x)")
-print(f"compression efficiency (cosine, paper Fig. 7 metric): "
-      f"{float(enc.cosine):+.3f}")
+    key = jax.random.PRNGKey(0)
+    model = make_paper_model("mlp", MNIST_SPEC)   # 199,210 params (paper Fig. 1)
+    w_global = model.init(key)
+    ds = make_class_image_dataset(jax.random.PRNGKey(1), args.train_size,
+                                  (28, 28, 1), 10)
 
-# --- server: decode (Eq. 10) + update ----------------------------------------
-recon = threesfc.decode(model.syn_loss, w_global, enc.syn, enc.s)
-err = flat.tree_norm(flat.tree_sub(recon, enc.recon))
-print(f"server decode == client recon: L2 diff {float(err):.2e} (exactness)")
-fl = flat.Flattener(w_global)
-fcos, frel = baselines.reconstruction_stats(fl.flatten(g_accum), fl.flatten(recon))
-print(f"reconstruction fidelity vs true update: cos {float(fcos):+.3f}, "
-      f"rel L2 err {float(frel):.3f}")
-w_next = jax.tree.map(lambda p, u: p - u, w_global, recon)
+    # --- client: K local SGD steps ------------------------------------------
+    w = w_global
+    for i in range(args.local_steps):
+        lo, hi = i * args.batch, (i + 1) * args.batch
+        batch = {"x": jnp.asarray(ds.x[lo:hi]), "y": jnp.asarray(ds.y[lo:hi])}
+        g = jax.grad(model.loss)(w, batch)
+        w = jax.tree.map(lambda p, gr: p - 0.05 * gr, w, g)
+    g_accum = flat.tree_sub(w_global, w)             # g = w^t - w_i^t (Eq. 3)
 
-te = make_class_image_dataset(jax.random.PRNGKey(3), 400, (28, 28, 1), 10)
-a0 = accuracy(model.apply(w_global, jnp.asarray(te.x)), jnp.asarray(te.y))
-a1 = accuracy(model.apply(w_next, jnp.asarray(te.x)), jnp.asarray(te.y))
-print(f"test acc before {float(a0):.3f} -> after 1 compressed round {float(a1):.3f}")
+    # --- client: 3SFC encode (Eq. 8/9) via the registered strategy ----------
+    comp = CompressorConfig(kind="threesfc", syn_batch=1,
+                            syn_steps=args.syn_steps, syn_lr=0.1)
+    spec = vision_syn_spec(MNIST_SPEC, comp)
+    strategy = make_strategy(comp, loss_fn=model.syn_loss, syn_spec=spec)
+    enc = strategy.client_encode(jax.random.PRNGKey(2), g_accum, w_global)
+    d = flat.tree_size(w_global)
+    payload = strategy.payload_floats(w_global)
+    print(f"uplink payload: {payload:.0f} floats vs {d:,} gradient entries "
+          f"-> {d / payload:.1f}x compression (paper: 250.6x)")
+    print(f"compression efficiency (cosine, paper Fig. 7 metric): "
+          f"{float(enc.cosine):+.3f}")
+
+    # --- the wire: the strategy's codec serializes the (D_syn, s) payload ---
+    codec = strategy.wire_codec(w_global)
+    buf = codec.encode(enc.wire)
+    print(f"serialized uplink frame: {codec.nbytes} bytes "
+          f"({codec.nbytes - codec.header_bytes} payload + "
+          f"{codec.header_bytes} header)")
+
+    # --- server: decode the framed payload (Eq. 10) + update ----------------
+    recon = strategy.server_decode(codec.decode(buf), w_global)
+    err = flat.tree_norm(flat.tree_sub(recon, enc.recon))
+    print(f"server decode == client recon: L2 diff {float(err):.2e} "
+          f"(exactness)")
+    fl = flat.Flattener(w_global)
+    fcos, frel = baselines.reconstruction_stats(fl.flatten(g_accum),
+                                                fl.flatten(recon))
+    print(f"reconstruction fidelity vs true update: cos {float(fcos):+.3f}, "
+          f"rel L2 err {float(frel):.3f}")
+    w_next = jax.tree.map(lambda p, u: p - u, w_global, recon)
+
+    te = make_class_image_dataset(jax.random.PRNGKey(3), args.test_size,
+                                  (28, 28, 1), 10)
+    a0 = accuracy(model.apply(w_global, jnp.asarray(te.x)), jnp.asarray(te.y))
+    a1 = accuracy(model.apply(w_next, jnp.asarray(te.x)), jnp.asarray(te.y))
+    print(f"test acc before {float(a0):.3f} -> after 1 compressed round "
+          f"{float(a1):.3f}")
+    return float(err)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,16 @@
 """repro.comm — the wire-format layer: framed bytes, not accounted floats.
 
 ``frame``  — versioned fixed-layout header; static sizes usable under jit.
-``codec``  — per-compressor encode/decode between payloads and uint8 frames.
+``codec``  — per-compressor encode/decode between payloads and uint8 frames,
+             registered per ``CompressorConfig.kind`` (``register_codec``).
 ``channel``— in-process transport moving only encoded buffers, with byte
              counters.
 """
 from repro.comm.channel import InProcessChannel, LinkStats
-from repro.comm.codec import (CODECS, Codec, make_codec, wire_bytes)
-from repro.comm.frame import FrameSpec, parse_header
+from repro.comm.codec import (CODECS, Codec, make_codec, register_codec,
+                              wire_bytes)
+from repro.comm.frame import FrameSpec, parse_header, register_kind_id
 
 __all__ = ["CODECS", "Codec", "FrameSpec", "InProcessChannel", "LinkStats",
-           "make_codec", "parse_header", "wire_bytes"]
+           "make_codec", "parse_header", "register_codec",
+           "register_kind_id", "wire_bytes"]

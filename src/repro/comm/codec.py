@@ -37,8 +37,7 @@ import numpy as np
 
 from repro.comm import frame
 from repro.configs.base import CompressorConfig
-from repro.core import flat
-from repro.core.compressor import TreeCompressed, leaf_k
+from repro.core.strategy import TreeCompressed, leaf_k, make_strategy
 from repro.core.threesfc import SynData, SynSpec
 from repro.kernels import bitpack
 
@@ -136,15 +135,24 @@ class Codec:
     kind: str = ""
 
     def __init__(self, cfg: CompressorConfig, params: PyTree,
-                 policy: str = "fp32"):
+                 policy: str = "fp32", *, strategy=None):
         if policy not in POLICY_DTYPES:
             raise ValueError(f"unknown dtype policy {policy!r}")
         self.cfg = cfg
         self.policy = policy
+        # the method's CompressionStrategy — server reconstruction
+        # (``recon_tree``) delegates to its ``server_decode`` so the Eq. 10
+        # decode logic lives once, on the protocol object
+        self.strategy = strategy if strategy is not None \
+            else make_strategy(cfg)
         leaves, self.treedef = jax.tree_util.tree_flatten(params)
         self.shapes = [tuple(jnp.shape(l)) for l in leaves]
         self.sizes = [int(np.prod(s)) if len(s) else 1 for s in self.shapes]
         self.d = int(sum(self.sizes))
+        # allocation-free params stand-in for shape-only reconstruction
+        self.template = jax.tree_util.tree_unflatten(
+            self.treedef,
+            [jax.ShapeDtypeStruct(s, jnp.float32) for s in self.shapes])
         self.spec = frame.FrameSpec(self.kind, policy,
                                     tuple(self._section_bytes()))
 
@@ -191,8 +199,16 @@ class Codec:
         return wire
 
     def recon_tree(self, canon, params: PyTree) -> PyTree:
-        """Server-side reconstruction from the decoded payload."""
-        raise NotImplementedError
+        """Server-side reconstruction from the decoded payload — the
+        strategy's ``server_decode``, which is the one copy of each
+        method's decode semantics."""
+        return self.strategy.server_decode(canon, params)
+
+    def check_round_wire(self) -> None:
+        """Raise if this codec cannot host ``fl.round``'s wire mode (the
+        round requires client EF to match the server decode exactly);
+        lossless codecs and codecs with an exact ``client_view`` pass."""
+        return None
 
     def client_view(self, out: TreeCompressed):
         """(recon, direction, scale) the client must use in wire mode.
@@ -213,9 +229,23 @@ class Codec:
 CODECS: Dict[str, Callable[..., Codec]] = {}
 
 
-def _register(cls):
+def register_codec(cls):
+    """Register a ``Codec`` subclass under its ``kind`` (duplicate kinds
+    rejected — the third-party extension point, mirroring
+    ``repro.core.strategy.register_strategy``). Third-party kinds are
+    assigned an on-the-wire header id in the frame's extension range."""
+    if not cls.kind:
+        raise ValueError(
+            f"codec class {cls.__name__} must set a non-empty `kind`")
+    if cls.kind in CODECS:
+        raise ValueError(f"codec kind {cls.kind!r} already registered "
+                         f"(by {CODECS[cls.kind].__name__})")
+    frame.register_kind_id(cls.kind)
     CODECS[cls.kind] = cls
     return cls
+
+
+_register = register_codec          # back-compat alias
 
 
 @_register
@@ -243,9 +273,6 @@ class IdentityCodec(Codec):
         # the wire stream is f32; decode hands back f32 leaves
         return jax.tree_util.tree_map(
             lambda l: jnp.asarray(l, jnp.float32), wire)
-
-    def recon_tree(self, canon, params):
-        return canon
 
 
 @_register
@@ -279,13 +306,6 @@ class TopkCodec(Codec):
             out.append((vals, idx.astype(jnp.int32)))
         return tuple(out)
 
-    def recon_tree(self, canon, params):
-        leaves = []
-        for (vals, idx), shape, n in zip(canon, self.shapes, self.sizes):
-            leaves.append(jnp.zeros((n,), jnp.float32).at[idx].set(vals)
-                          .reshape(shape))
-        return self._leaf_tree(leaves)
-
 
 @_register
 class SignCodec(Codec):
@@ -318,9 +338,6 @@ class SignCodec(Codec):
             leaves.append((scales[i] * pm1[off:off + n]).reshape(shape))
             off += n
         return self._leaf_tree(leaves)
-
-    def recon_tree(self, canon, params):
-        return canon
 
     def canonical(self, wire):
         u, scales = wire
@@ -373,18 +390,12 @@ class StcCodec(Codec):
             out.append((pm1, idx.astype(jnp.int32), mu))
         return tuple(out)
 
-    def recon_tree(self, canon, params):
-        leaves = []
-        for (pm1, idx, mu), shape, n in zip(canon, self.shapes, self.sizes):
-            leaves.append(jnp.zeros((n,), jnp.float32).at[idx].set(mu * pm1)
-                          .reshape(shape))
-        return self._leaf_tree(leaves)
-
     def canonical(self, wire):
         return tuple((_pm1(sgn), idx, mu) for sgn, idx, mu in wire)
 
     def client_view(self, out):
-        return self.recon_tree(self.canonical(out.wire), None), None, None
+        return self.recon_tree(self.canonical(out.wire),
+                               self.template), None, None
 
 
 @_register
@@ -397,10 +408,9 @@ class ThreesfcCodec(Codec):
 
     kind = "threesfc"
 
-    def __init__(self, cfg, params, policy="fp32", *, syn_spec: SynSpec,
-                 syn_loss_fn=None):
+    def __init__(self, cfg, params, policy="fp32", *, strategy):
+        syn_spec: SynSpec = strategy.syn_spec
         self.syn_spec = syn_spec
-        self.syn_loss_fn = syn_loss_fn
         lead = syn_spec.label_lead or syn_spec.x_shape[:1]
         if syn_spec.label_rank:
             self.y_shape = (*lead, syn_spec.label_rank)
@@ -408,7 +418,7 @@ class ThreesfcCodec(Codec):
         else:
             self.y_shape = (*lead, syn_spec.num_classes)
             self.v_shape = (0, 0)
-        super().__init__(cfg, params, policy)
+        super().__init__(cfg, params, policy, strategy=strategy)
 
     def _section_bytes(self):
         item = POLICY_ITEMBYTES[self.policy]
@@ -439,16 +449,16 @@ class ThreesfcCodec(Codec):
                           for a in syn]),
                 jnp.asarray(s, jnp.float32))
 
-    def recon_tree(self, canon, params):
-        assert self.syn_loss_fn is not None, \
-            "threesfc decode-side reconstruction needs syn_loss_fn"
-        syn, s = canon
-        gw = jax.grad(self.syn_loss_fn)(params, syn)
-        return flat.tree_scale(gw, s)
+    def check_round_wire(self):
+        if self.policy != "fp32":
+            raise ValueError(
+                "the round's wire mode requires the lossless fp32 policy "
+                "for threesfc (client EF runs on the factored (gw, s)); "
+                "lossy policies are a codec-level feature")
 
     def client_view(self, out):
         # EF runs on the factored (gw, s) — exact at fp32 policy (the only
-        # policy the round's wire mode admits; see fl.round wire checks).
+        # policy the round's wire mode admits; see check_round_wire).
         return None, out.direction, out.scale
 
 
@@ -470,12 +480,8 @@ def make_codec(cfg: CompressorConfig, params: PyTree, *,
         raise KeyError(
             f"no wire codec registered for compressor kind {cfg.kind!r} "
             f"(have: {sorted(CODECS)})")
-    policy = policy or getattr(cfg, "wire_dtype", "fp32")
-    if cfg.kind == "threesfc":
-        assert syn_spec is not None, "threesfc codec needs syn_spec"
-        return ThreesfcCodec(cfg, params, policy, syn_spec=syn_spec,
-                             syn_loss_fn=syn_loss_fn)
-    return CODECS[cfg.kind](cfg, params, policy)
+    strategy = make_strategy(cfg, loss_fn=syn_loss_fn, syn_spec=syn_spec)
+    return strategy.wire_codec(params, policy=policy)
 
 
 def wire_bytes(cfg: CompressorConfig, params: PyTree, *,

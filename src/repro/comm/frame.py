@@ -47,6 +47,42 @@ KIND_IDS: Dict[str, int] = {
 }
 KIND_NAMES = {v: k for k, v in KIND_IDS.items()}
 
+# Third-party codec kinds (comm.codec.register_codec) get ids in the
+# extension range so they can never collide with a future built-in.
+EXTENSION_KIND_BASE = 128
+
+
+def _extension_id(kind: str) -> int:
+    """Deterministic extension-range id from the kind NAME, so the same
+    kind maps to the same on-the-wire byte in every process regardless of
+    registration order (frames stay parseable across processes/restarts)."""
+    import hashlib
+
+    h = hashlib.sha256(kind.encode()).digest()
+    return EXTENSION_KIND_BASE + h[0] % (256 - EXTENSION_KIND_BASE)
+
+
+def register_kind_id(kind: str, kind_id: int = None) -> int:
+    """Assign an on-the-wire id to a codec kind (idempotent for known ones).
+
+    Without an explicit ``kind_id`` a name-derived extension-range id is
+    used; a (rare) hash collision or an explicitly taken id is rejected —
+    pass an explicit free id then. Ids must fit the 1-byte header field.
+    """
+    if kind in KIND_IDS:
+        return KIND_IDS[kind]
+    if kind_id is None:
+        kind_id = _extension_id(kind)
+    if not 0 <= kind_id <= 255:
+        raise ValueError(f"kind id {kind_id} does not fit the 1-byte field")
+    if kind_id in KIND_NAMES:
+        raise ValueError(
+            f"kind id {kind_id} for {kind!r} already taken by "
+            f"{KIND_NAMES[kind_id]!r}; pass an explicit free kind_id")
+    KIND_IDS[kind] = kind_id
+    KIND_NAMES[kind_id] = kind
+    return kind_id
+
 # 3SFC payload dtype policies (see comm.codec.POLICY_DTYPES).
 POLICY_IDS: Dict[str, int] = {"fp32": 0, "fp16": 1, "bf16": 2}
 POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}

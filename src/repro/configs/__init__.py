@@ -9,3 +9,4 @@ from repro.configs.base import (
     get_smoke_config,
     list_archs,
 )
+from repro.configs.run import RunConfig

@@ -1,0 +1,136 @@
+"""RunConfig: every knob of one federated run, validated at construction.
+
+Before this module the round-construction knobs were scattered across four
+surfaces — ``FLConfig`` (+ its nested ``CompressorConfig``), the ``wire=``
+/ ``codec=`` pair, the ``client_parallel=`` / ``mesh=`` pair and the
+``fused_decode`` / ``num_micro`` extras — each validated (or not) at a
+different layer. ``RunConfig`` is the one frozen object the round pipeline
+(``repro.fl.round.build_fl_round``), the training CLI
+(``repro.launch.train``), the AOT entry specs (``repro.launch.specs``) and
+the benchmark harness consume:
+
+* construction-time validation: illegal ``client_parallel``/``wire``
+  values, a shard_map fan-out without a mesh, or a client count that does
+  not divide the mesh's client axes all fail at ``RunConfig(...)`` time —
+  not at trace time three layers deeper.
+* ``to_json()``/``from_json()`` round-trip every serializable field (the
+  mesh is runtime state: re-attach it via ``from_json(d, mesh=...)``), so
+  a run's exact configuration can be logged next to its metrics.
+* ``from_flags(args, compressor=...)`` builds one from the training CLI's
+  argparse namespace — the single mapping from flag names to config fields
+  (see ROADMAP.md for the old-flag -> field table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import CompressorConfig, FLConfig
+
+CLIENT_PARALLEL_MODES = ("vmap", "shard_map")
+WIRE_MODES = ("float", "codec")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """One federated run: FL schedule + compressor + transport knobs."""
+
+    fl: FLConfig = field(default_factory=FLConfig)
+    # client fan-out: single-program vmap (the bit-exactness oracle) or an
+    # explicitly sharded shard_map over client_axes(mesh)
+    client_parallel: str = "vmap"
+    # what crosses the client/server boundary: float trees (accounted
+    # bytes) or framed uint8 codec buffers (measured bytes)
+    wire: str = "float"
+    # dtype policy for the serialized synthetic payload (codec wire only)
+    wire_policy: str = "fp32"
+    # strategy-declared capability: aggregate from the batched payloads
+    # (3SFC: one replicated backward) instead of gathered reconstructions
+    fused_decode: bool = False
+    # gradient microbatching depth inside each local step
+    num_micro: int = 1
+    # runtime state, never serialized; required for shard_map, optional
+    # for vmap (pins the fused path's replication constraint)
+    mesh: Optional[Any] = field(default=None, compare=False)
+
+    def __post_init__(self):
+        if self.client_parallel not in CLIENT_PARALLEL_MODES:
+            raise ValueError(
+                f"client_parallel must be 'vmap' or 'shard_map', got "
+                f"{self.client_parallel!r}")
+        if self.wire not in WIRE_MODES:
+            raise ValueError(
+                f"wire must be 'float' or 'codec', got {self.wire!r}")
+        if self.num_micro < 1:
+            raise ValueError(f"num_micro must be >= 1, got {self.num_micro}")
+        if self.client_parallel == "shard_map":
+            if self.mesh is None:
+                raise ValueError(
+                    "client_parallel='shard_map' requires an explicit mesh "
+                    "(see repro.fl.sharding.make_fl_shardings)")
+            # the shard-count/divisibility policy is FLShardings' — one
+            # source of truth for the mesh contract (imported lazily:
+            # fl.sharding sits above this package)
+            from repro.fl.sharding import make_fl_shardings
+            make_fl_shardings(self.mesh).check_divisible(self.fl.num_clients)
+
+    # -- derived -----------------------------------------------------------
+    def client_axes(self) -> Optional[Tuple[str, ...]]:
+        """Mesh axes of the shard_map fan-out; None for the vmap fan-out."""
+        if self.client_parallel != "shard_map":
+            return None
+        from repro.fl.sharding import make_fl_shardings
+        return make_fl_shardings(self.mesh).axes
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serializable dict of every field except the runtime mesh."""
+        return {
+            "fl": dataclasses.asdict(self.fl),
+            "client_parallel": self.client_parallel,
+            "wire": self.wire,
+            "wire_policy": self.wire_policy,
+            "fused_decode": self.fused_decode,
+            "num_micro": self.num_micro,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any], *, mesh=None) -> "RunConfig":
+        fl_d = dict(d["fl"])
+        comp = CompressorConfig(**fl_d.pop("compressor"))
+        return cls(fl=FLConfig(compressor=comp, **fl_d),
+                   client_parallel=d.get("client_parallel", "vmap"),
+                   wire=d.get("wire", "float"),
+                   wire_policy=d.get("wire_policy", "fp32"),
+                   fused_decode=d.get("fused_decode", False),
+                   num_micro=d.get("num_micro", 1),
+                   mesh=mesh)
+
+    @classmethod
+    def from_flags(cls, args, *, compressor: CompressorConfig,
+                   client_parallel: str = "vmap", mesh=None) -> "RunConfig":
+        """Build from the training CLI's argparse namespace.
+
+        ``compressor`` is resolved by the driver (budget tables need the
+        model); ``client_parallel`` arrives already de-'auto'-ed (the
+        device-count probe is the driver's job, not a config's).
+        """
+        fl = FLConfig(
+            num_clients=args.clients,
+            local_steps=args.local_steps,
+            local_lr=args.lr,
+            local_batch=args.batch,
+            rounds=args.rounds,
+            dirichlet_alpha=getattr(args, "alpha", 0.5),
+            compressor=compressor,
+            seed=args.seed,
+        )
+        return cls(fl=fl,
+                   client_parallel=client_parallel,
+                   wire=getattr(args, "wire", "float"),
+                   wire_policy=getattr(args, "wire_policy", "fp32"),
+                   mesh=mesh)

@@ -1,2 +1,11 @@
-"""Core: the paper's contribution — 3SFC + EF + baseline compressors."""
-from repro.core import baselines, error_feedback, fedsynth, flat, threesfc  # noqa: F401
+"""Core: the paper's contribution — 3SFC + EF + baseline compressors.
+
+Method dispatch lives in ``repro.core.strategy``: one registered
+``CompressionStrategy`` per compression method (``make_strategy``,
+``register_strategy``); ``compressor`` keeps the historical
+``make_compressor`` facade over it.
+"""
+from repro.core import (baselines, error_feedback, fedsynth, flat,  # noqa: F401
+                        strategy, threesfc)
+from repro.core.strategy import (CompressionStrategy, make_strategy,  # noqa: F401
+                                 register_strategy, strategy_kinds)

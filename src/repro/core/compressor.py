@@ -1,157 +1,72 @@
-"""Unified, tree-based compressor interface for the FL runtime.
+"""Back-compat facade over the ``repro.core.strategy`` registry.
 
-``make_compressor(cfg, ...)`` returns a ``TreeCompressor`` whose ``step`` maps
-(per-client) ``(key, g_tree, e_tree, params) -> (recon_tree, e_tree',
-metrics)``. Everything is jit/vmap-safe: payload sizes are static, EF
-residuals live as pytrees mirroring the parameters (never a global concat —
-at production scale a flat concat would destroy GSPMD sharding; per-leaf
-operation keeps every collective on the leaf's own mesh axes).
+Since PR 5 every compression method lives as ONE registered
+``CompressionStrategy`` object (``repro.core.strategy``): per-method
+encode, server-side decode/aggregate, wire codec and payload accounting
+travel together, and method dispatch is a registry lookup — not the
+``kind``-keyed if/elif chains that used to live here. This module keeps the
+two seed-era entry points alive for existing callers:
 
-Baselines run *per-leaf* (per-layer), matching how DGC/STC are deployed; the
-global compression rate equals the per-leaf rate. 3SFC/FedSynth operate on
-the tree directly (their reductions are per-leaf + scalar all-reduce).
+* ``TreeCompressor`` — a thin delegator exposing the strategy's derived
+  steps under the historical names (``step``, ``wire_step``,
+  ``compress_tree``, ``payload_floats``, ``init_state``). Everything is
+  jit/vmap-safe: payload sizes are static, EF residuals live as pytrees
+  mirroring the parameters (never a global concat — at production scale a
+  flat concat would destroy GSPMD sharding; per-leaf operation keeps every
+  collective on the leaf's own mesh axes).
+* ``make_compressor(cfg, ...)`` — deprecated shim: builds the registered
+  strategy and wraps it. New code should call
+  ``repro.core.strategy.make_strategy`` and hand the strategy to
+  ``repro.fl.round.build_fl_round`` directly.
+
+Baselines run *per-leaf* (per-layer), matching how DGC/STC are deployed;
+the global compression rate equals the per-leaf rate. 3SFC/FedSynth operate
+on the tree directly (their reductions are per-leaf + scalar all-reduce).
+Adding a method is one ``@register_strategy("kind")`` class — see the
+strategy module docstring and README.md §"Writing a new compressor".
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import baselines, fedsynth, flat, threesfc
 from repro.configs.base import CompressorConfig
-from repro.kernels import ops
+from repro.core import flat, threesfc
+# re-exported for back-compat: these types moved to repro.core.strategy
+from repro.core.strategy import (CompressMetrics, CompressionStrategy,
+                                 TreeCompressed, leaf_k, make_strategy,
+                                 warn_deprecated_once)
 
-
-class CompressMetrics(NamedTuple):
-    cosine: jax.Array                # compression efficiency (Fig. 7)
-    payload_floats: jax.Array        # accounted wire size this round
-    aux: jax.Array                   # method-specific (3SFC: objective; else 0)
-
-
-class TreeCompressed(NamedTuple):
-    """What a per-method ``compress_tree`` hands back to the EF wrapper.
-
-    ``cosine`` (when not None) is the already-computed cos(recon, u), so the
-    wrapper skips its own ``tree_cosine`` pass; ``direction``/``scale`` (when
-    not None) factor ``recon = scale · direction``, letting the EF update run
-    as one fused ``e' = u − s·direction`` stream (``kernels.ops.
-    tree_ef_update``) instead of reading the materialized recon again.
-    ``wire`` is the method-specific wire payload (the quantities a
-    ``repro.comm.codec`` codec serializes — value/index streams, sign
-    sources, the (D_syn, s) pair); ``None`` for kinds without a wire format.
-    Unused in float mode, so it costs nothing there (dead-code eliminated).
-    """
-
-    recon: Any
-    floats: jax.Array
-    aux: jax.Array
-    cosine: Optional[jax.Array] = None
-    direction: Any = None
-    scale: Optional[jax.Array] = None
-    wire: Any = None
+__all__ = ["CompressMetrics", "TreeCompressed", "TreeCompressor",
+           "leaf_k", "make_compressor"]
 
 
 class TreeCompressor:
-    def __init__(self, cfg: CompressorConfig, step_fn, payload_floats_fn,
-                 compress_tree=None):
-        self.cfg = cfg
-        self._step = step_fn
-        self._payload = payload_floats_fn
+    """Historical facade: the strategy's derived steps under the old names."""
+
+    def __init__(self, strategy: CompressionStrategy):
+        self.strategy = strategy
+        self.cfg = strategy.cfg
         # (key, u_tree, params) -> TreeCompressed; exposed for the wire path
         # and benchmarks that need the raw payload.
-        self.compress_tree = compress_tree
+        self.compress_tree = strategy.client_encode
 
     def init_state(self, params: flat.PyTree) -> flat.PyTree:
         """EF residual pytree (zeros, f32) mirroring params."""
-        return jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params
-        )
+        return self.strategy.init_ef_state(params)
 
     def payload_floats(self, params: flat.PyTree) -> float:
-        return self._payload(params)
+        return self.strategy.payload_floats(params)
 
     def step(self, key, g_tree, e_tree, params):
         """Returns (recon_tree, new_e_tree, CompressMetrics)."""
-        return self._step(key, g_tree, e_tree, params)
+        return self.strategy.step(key, g_tree, e_tree, params)
 
     def wire_step(self, key, g_tree, e_tree, params, *, codec,
                   round_idx=0, client_idx=0):
-        """Codec-mode step: (encoded uint8 buffer, new_e_tree, metrics).
-
-        Same EF algebra as ``step`` but everything downstream of the
-        compressor sees only the serialized frame; the reconstruction used
-        for EF/cosine is the codec's *dequantized view* (``Codec.
-        client_view``), so the client stays consistent with what the server
-        will decode — identical to the float path wherever the codec is
-        lossless (identity/topk; threesfc at the fp32 policy), and the
-        documented 1-bit sign convention for signsgd/stc.
-        """
-        cfg = self.cfg
-        if self.compress_tree is None:
-            raise ValueError(f"compressor kind {cfg.kind!r} has no wire path")
-        if cfg.error_feedback:
-            u = flat.tree_add(g_tree, e_tree)
-        else:
-            u = g_tree
-        out = self.compress_tree(key, u, params)
-        if out.wire is None:
-            raise ValueError(
-                f"compressor kind {cfg.kind!r} emits no wire payload")
-        buf = codec.encode(out.wire, round_idx=round_idx,
-                           client_idx=client_idx)
-        recon, direction, scale = codec.client_view(out)
-        e_new = _ef_update(cfg, u, e_tree, recon, direction, scale)
-        cos = _efficiency_cosine(out, recon, u)
-        return buf, e_new, CompressMetrics(cos, out.floats, out.aux)
-
-
-def leaf_k(n: int, ratio: float) -> int:
-    """Kept entries for a size-n leaf at ``keep_ratio`` — the single source
-    of truth for per-leaf budgets (the wire codecs derive their static
-    layouts from the same function)."""
-    return max(1, int(round(ratio * n)))
-
-
-def _leaf_k(leaf, ratio: float) -> int:
-    return leaf_k(leaf.size, ratio)
-
-
-def _ef_update(cfg, u, e_tree, recon, direction, scale):
-    """Eq. 6 residual on a (recon | direction·scale) view — the ONE copy of
-    the EF algebra, shared by the float path (the compressor's own recon)
-    and the wire path (the codec's dequantized view)."""
-    if not cfg.error_feedback:
-        return e_tree
-    if direction is not None:
-        return ops.tree_ef_update(u, direction, scale)
-    return flat.tree_sub(u, recon)
-
-
-def _efficiency_cosine(out, recon, u):
-    """cos(recon, u) unless the method already computed it fused."""
-    return out.cosine if out.cosine is not None \
-        else flat.tree_cosine(recon, u)
-
-
-def _ef_wrap(cfg, compress_tree):
-    """Generic tree EF (Eq. 6) around a (key, u_tree, params)->TreeCompressed
-    closure. Reuses the method's own stats where offered (see TreeCompressed)
-    so the wrapper adds zero extra O(d) reduction passes for 3SFC."""
-
-    def step(key, g_tree, e_tree, params):
-        if cfg.error_feedback:
-            u = flat.tree_add(g_tree, e_tree)
-        else:
-            u = g_tree
-        out = compress_tree(key, u, params)
-        e_new = _ef_update(cfg, u, e_tree, out.recon, out.direction, out.scale)
-        cos = _efficiency_cosine(out, out.recon, u)
-        return out.recon, e_new, CompressMetrics(cos, out.floats, out.aux)
-
-    return step
+        """Codec-mode step: (encoded uint8 buffer, new_e_tree, metrics)."""
+        return self.strategy.wire_step(key, g_tree, e_tree, params,
+                                       codec=codec, round_idx=round_idx,
+                                       client_idx=client_idx)
 
 
 def make_compressor(
@@ -161,129 +76,10 @@ def make_compressor(
     syn_spec: Optional[threesfc.SynSpec] = None,
     local_lr: float = 0.01,
 ) -> TreeCompressor:
-    kind = cfg.kind
-
-    # ---- payload accounting (static) -------------------------------------
-    def payload_floats_fn(params) -> float:
-        leaves = jax.tree_util.tree_leaves(params)
-        d = sum(l.size for l in leaves)
-        if kind == "identity":
-            return float(d)
-        if kind == "topk":
-            return float(sum(2 * _leaf_k(l, cfg.keep_ratio) for l in leaves))
-        if kind == "randk":
-            return float(sum(_leaf_k(l, cfg.keep_ratio) for l in leaves) + 1)
-        if kind == "signsgd":
-            return d / 32.0 + len(leaves)
-        if kind == "stc":
-            ks = [_leaf_k(l, cfg.keep_ratio) for l in leaves]
-            return float(sum(ks)) + sum(ks) / 32.0 + len(leaves)
-        if kind in ("threesfc", "fedsynth"):
-            assert syn_spec is not None
-            return syn_spec.floats + 1.0
-        raise ValueError(f"unknown compressor kind {kind!r}")
-
-    # ---- per-method tree compression --------------------------------------
-    if kind == "identity":
-        def compress_tree(key, u, params):
-            # recon == u exactly, so the efficiency cosine is 1 by identity —
-            # no reduction pass needed. The wire payload is the tree itself.
-            return TreeCompressed(u, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0), cosine=jnp.float32(1.0),
-                                  wire=u)
-
-    elif kind == "topk":
-        def compress_tree(key, u, params):
-            leaves, treedef = jax.tree_util.tree_flatten(u)
-            recs, wires = [], []
-            for l in leaves:
-                k = _leaf_k(l, cfg.keep_ratio)
-                v = l.ravel()
-                _, idx = jax.lax.top_k(jnp.abs(v), k)
-                vals = v[idx]
-                recs.append(jnp.zeros_like(v).at[idx].set(vals)
-                            .reshape(l.shape))
-                wires.append((vals, idx))
-            recon = jax.tree_util.tree_unflatten(treedef, recs)
-            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0), wire=tuple(wires))
-
-    elif kind == "randk":
-        def compress_tree(key, u, params):
-            leaves, treedef = jax.tree_util.tree_flatten(u)
-            keys = jax.random.split(key, len(leaves))
-            out = []
-            for l, k_i in zip(leaves, keys):
-                k = _leaf_k(l, cfg.keep_ratio)
-                v = l.ravel()
-                idx = jax.random.choice(k_i, v.size, shape=(k,), replace=False)
-                kept = jnp.zeros_like(v).at[idx].set(v[idx])
-                out.append(kept.reshape(l.shape))
-            recon = jax.tree_util.tree_unflatten(treedef, out)
-            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0))
-
-    elif kind == "signsgd":
-        def compress_tree(key, u, params):
-            leaves, treedef = jax.tree_util.tree_flatten(u)
-            scales = [jnp.mean(jnp.abs(l)) for l in leaves]
-            recon = jax.tree_util.tree_unflatten(
-                treedef, [s * jnp.sign(l) for s, l in zip(scales, leaves)])
-            # wire: the sign *source* tree + per-leaf scales; the codec packs
-            # one bit per coordinate from it (bit = coord >= 0).
-            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0),
-                                  wire=(u, jnp.stack(scales)))
-
-    elif kind == "stc":
-        def compress_tree(key, u, params):
-            leaves, treedef = jax.tree_util.tree_flatten(u)
-            recs, wires = [], []
-            for l in leaves:
-                k = _leaf_k(l, cfg.keep_ratio)
-                v = l.ravel()
-                _, idx = jax.lax.top_k(jnp.abs(v), k)
-                vals = v[idx]
-                mu = jnp.mean(jnp.abs(vals))
-                sgn = jnp.sign(vals)
-                recs.append(jnp.zeros_like(v).at[idx].set(mu * sgn)
-                            .reshape(l.shape))
-                wires.append((sgn, idx, mu))
-            recon = jax.tree_util.tree_unflatten(treedef, recs)
-            return TreeCompressed(recon, jnp.float32(payload_floats_fn(params)),
-                                  jnp.float32(0), wire=tuple(wires))
-
-    elif kind == "threesfc":
-        assert loss_fn is not None and syn_spec is not None
-
-        def compress_tree(key, u, params):
-            syn0 = threesfc.init_syn(key, syn_spec)
-            res = threesfc.encode(
-                loss_fn, params, u, syn0,
-                steps=cfg.syn_steps, lr=cfg.syn_lr, lam=cfg.l2_coef,
-            )
-            # encode's fused stats triple already carries cos(recon, u) and
-            # the (gw, s) factorization — EF and metrics add no extra passes.
-            return TreeCompressed(res.recon, jnp.float32(payload_floats_fn(params)),
-                                  res.objective, cosine=res.cosine,
-                                  direction=res.gw, scale=res.s,
-                                  wire=(res.syn, res.s))
-
-    elif kind == "fedsynth":
-        assert loss_fn is not None and syn_spec is not None
-
-        def compress_tree(key, u, params):
-            syn0 = threesfc.init_syn(key, syn_spec)
-            res = fedsynth.encode(
-                loss_fn, params, u, syn0,
-                unroll_steps=cfg.unroll_steps, opt_steps=max(cfg.syn_steps, 10),
-                lr=local_lr, syn_lr=cfg.syn_lr,
-            )
-            return TreeCompressed(res.recon, jnp.float32(payload_floats_fn(params)),
-                                  res.l2)
-
-    else:
-        raise ValueError(f"unknown compressor kind {kind!r}")
-
-    return TreeCompressor(cfg, _ef_wrap(cfg, compress_tree), payload_floats_fn,
-                          compress_tree=compress_tree)
+    """Deprecated: ``make_strategy`` + ``TreeCompressor`` in one call."""
+    warn_deprecated_once(
+        "make_compressor",
+        "repro.core.strategy.make_strategy(cfg, ...)")
+    return TreeCompressor(make_strategy(cfg, loss_fn=loss_fn,
+                                        syn_spec=syn_spec,
+                                        local_lr=local_lr))

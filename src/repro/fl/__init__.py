@@ -1,6 +1,7 @@
 from repro.fl.client import local_train
 from repro.fl.server import aggregate, server_update
-from repro.fl.round import FLState, fl_init, fl_round, make_fl_round
+from repro.fl.round import (FLState, build_fl_round, fl_init, fl_round,
+                            make_fl_round)
 from repro.fl.budget import matched_compressors, payload_budget
 from repro.fl.engine import (ClientPools, EngineStats, RoundEngine,
                              device_pools, token_batcher, vision_batcher)

@@ -32,11 +32,17 @@ def payload_budget(model_name: str, spec: VisionSpec, syn_batch: int = 1) -> flo
 
 def matched_compressors(model_name: str, spec: VisionSpec, d: int,
                         syn_batch: int = 1) -> Dict[str, CompressorConfig]:
-    """The paper's five methods at the paper's budget relations."""
+    """The paper's five methods at the paper's budget relations.
+
+    Every returned kind is checked against the strategy registry
+    (``repro.core.strategy``) so this table can never drift from what the
+    runtime can actually dispatch."""
+    from repro.core.strategy import strategy_kinds  # lazy: keep import-light
+
     B = payload_budget(model_name, spec, syn_batch)
     topk_ratio = max(B / 2.0, 1.0) / d          # 2k floats = B
     stc_ratio = (d / 33.0) / d                  # k + k/32 + 1 ~= d/32
-    return {
+    table = {
         "fedavg": CompressorConfig(kind="identity", error_feedback=False),
         "dgc": CompressorConfig(kind="topk", keep_ratio=topk_ratio),
         "signsgd": CompressorConfig(kind="signsgd"),
@@ -46,6 +52,11 @@ def matched_compressors(model_name: str, spec: VisionSpec, d: int,
         "threesfc": CompressorConfig(kind="threesfc", syn_batch=syn_batch,
                                      syn_steps=10, syn_lr=0.1),
     }
+    unknown = sorted({c.kind for c in table.values()} - set(strategy_kinds()))
+    if unknown:
+        raise ValueError(f"budget table names unregistered strategy kinds "
+                         f"{unknown} (registered: {strategy_kinds()})")
+    return table
 
 
 def measured_wire_bytes(cfg: CompressorConfig, params, *,

@@ -224,13 +224,17 @@ class RoundEngine:
         self.stats = EngineStats()
 
     # -- state ------------------------------------------------------------
-    def init_state(self, params: PyTree, num_clients: int) -> FLState:
+    def init_state(self, params: PyTree, num_clients: int,
+                   strategy=None) -> FLState:
         """``fl_init`` on a deep copy of ``params`` so donation of the
-        engine state can never consume the caller's model tree. With a
-        placement contract installed, the fresh state is placed on the mesh
-        (params replicated, EF client-sharded) before the first dispatch."""
+        engine state can never consume the caller's model tree. Pass the
+        round's ``CompressionStrategy`` so its ``init_ef_state`` shapes the
+        EF residual (zeros f32 otherwise — identical for every built-in).
+        With a placement contract installed, the fresh state is placed on
+        the mesh (params replicated, EF client-sharded) before the first
+        dispatch."""
         owned = jax.tree_util.tree_map(jnp.copy, params)
-        state = fl_init(owned, num_clients)
+        state = fl_init(owned, num_clients, strategy)
         if self.shardings is not None:
             state = self.shardings.place_state(state)
         return state

@@ -1,58 +1,61 @@
-"""One federated round, end to end, as a single jit/pjit-able function.
+"""One federated round, end to end, as a single jit/pjit-able pipeline.
 
-``make_fl_round(loss_fn, compressor, fl_cfg)`` closes over the model loss and
-the compressor and returns ``fl_round(state, client_batches, key)``:
+``build_fl_round(loss_fn, strategy, run)`` composes THE round function from
+three phases, each parameterized by the ``RunConfig`` and the
+``CompressionStrategy`` (``repro.core.strategy``) instead of being one of
+eight hand-written closure variants:
 
-  1. every client runs K local SGD steps (mapped over the client axis),
-  2. each client EF-compresses its accumulated update (3SFC encode / top-k /
-     sign / ... — per-client, no cross-client collectives),
-  3. the server aggregates reconstructions and updates the global model
-     (paper Eq. 6). For 3SFC the reconstruction is, by Eq. 10, exactly what
-     the server's decoder produces from (D_syn, s) — the exactness is a
-     tested property (tests/test_threesfc.py::test_decode_matches_encoder).
+  1. **client phase** — every client runs K local SGD steps, then the
+     strategy EF-compresses its accumulated update into a *message*:
+     the reconstruction tree (float mode), the raw wire payload (fused
+     mode) or a framed ``uint8`` codec buffer (codec mode). Per-client, no
+     cross-client collectives.
+  2. **transport boundary** — the client axis is fanned out either as a
+     plain ``vmap`` (single-device reference semantics, the bit-exactness
+     oracle) or as a ``jax.shard_map`` over ``client_axes(mesh)`` whose
+     only communication is ONE tiled ``all_gather`` of the messages (the
+     per-client region is HLO-gated collective-free under the
+     ``CLIENT_SCOPE`` named scope).
+  3. **server phase** — messages are decoded (codec mode) and aggregated:
+     the default path averages per-client reconstructions (``fl.server``),
+     while strategies declaring ``supports_fused_aggregate`` (3SFC) hand
+     the *batched payloads* straight to ``strategy.server_aggregate`` —
+     one replicated batched backward, no O(d) collective — so the fused
+     decode is a strategy capability, not a special case here.
 
-Client fan-out (``client_parallel``)
-------------------------------------
-* ``'vmap'`` (default): the client axis is a plain vmap — single-device
-  reference semantics, and the bit-exactness oracle for the sharded path.
-* ``'shard_map'`` (requires ``mesh``): each device runs its *local* clients'
-  ``local_train`` + encode under ``jax.shard_map`` over ``client_axes(mesh)``
-  with ZERO cross-client collectives in the per-client region (gated from
-  the compiled HLO by ``benchmarks/bench_collectives.py`` via the
-  ``CLIENT_SCOPE`` named scope). Only the shard_map *boundary* communicates:
+Fan-out notes (``run.client_parallel``)
+---------------------------------------
+* ``'vmap'``: single program; with a mesh attached, GSPMD partitions it.
+* ``'shard_map'`` (requires ``run.mesh``): each device runs its *local*
+  clients' ``local_train`` + encode; only the boundary communicates. The
+  default path's gather is deliberately ``all_gather``-then-reduce instead
+  of ``psum``: the all-reduce combiner order differs from a single-device
+  axis reduction (measured ~1e-5 on 8 hosts), which would break the
+  shard_map ≡ vmap oracle contract that keeps this pipeline testable. Per
+  the HLO byte accounting both forms move the same O(d) operand bytes per
+  device — a collective-order choice, not a bandwidth concession. The
+  fused path's gather carries ONLY the tiny payloads (= the paper's
+  compressed uplink, as on-mesh wire bytes).
 
-  - default path: one tiled ``all_gather`` of the per-client reconstructions
-    (the O(d)-per-device full-gradient collective — FedAvg's wire bill),
-    then the server aggregate/update runs replicated with bitwise the same
-    reduction order as the vmap oracle. An ``all_gather``-then-reduce is
-    deliberately used instead of ``psum``: the CPU/TPU all-reduce combiner
-    order differs from a single-device axis reduction (measured ~1e-5 on 8
-    hosts), which would break the shard_map ≡ vmap oracle contract that
-    keeps this refactor testable. Per the HLO byte accounting both forms
-    move the same O(d) operand bytes per device — this is a collective-order
-    choice, not a bandwidth concession.
-  - fused 3SFC path: the ``all_gather`` carries ONLY the tiny ``(D_syn, s)``
-    payload trees (= the paper's compressed uplink, as on-mesh wire bytes),
-    and the single batched server backward runs replicated. The O(d)
-    collective disappears entirely.
-
-Wire modes (``wire``)
----------------------
-* ``'float'`` (default): reconstructions cross the client/server boundary as
-  float trees; wire size is *accounted* (``payload_floats``, Eq. 1).
+Wire modes (``run.wire``)
+-------------------------
+* ``'float'``: messages are float trees; wire size is *accounted*
+  (``payload_floats``, Eq. 1).
 * ``'codec'`` (requires ``codec`` from ``repro.comm.make_codec``): each
-  client serializes its payload into ONE framed ``uint8`` buffer
-  (``compressor.wire_step``) inside the per-client region; only those
-  buffers cross the boundary (the shard_map path all-gathers the uint8
-  frames instead of float trees) and the server decodes them before
-  aggregating. ``RoundMetrics.wire_bytes_up`` then reports the *measured*
-  per-client uplink bytes. EF uses the codec's dequantized view, so client
-  and server stay consistent; wherever the codec is lossless the round is
-  bit-identical to float mode (gated by ``benchmarks/bench_wire.py``).
+  client serializes its payload into ONE framed ``uint8`` buffer inside
+  the per-client region; only those buffers cross the boundary and the
+  server decodes them before aggregating. ``RoundMetrics.wire_bytes_up``
+  then reports the *measured* per-client uplink bytes. EF uses the codec's
+  dequantized view, so client and server stay consistent; wherever the
+  codec is lossless the round is bit-identical to float mode (gated by
+  ``benchmarks/bench_wire.py``).
 
 Metrics returned per round: mean local loss, per-client cosine compression
 efficiency (paper Fig. 7), payload floats (paper Eq. 1 accounting), and the
 measured uplink bytes (0 in float mode — nothing was serialized).
+
+``make_fl_round`` is kept as a thin deprecated shim over
+``build_fl_round`` for existing callers.
 """
 from __future__ import annotations
 
@@ -64,8 +67,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FLConfig
+from repro.configs.run import RunConfig
 from repro.core import flat
-from repro.core.compressor import TreeCompressor
+from repro.core.strategy import CompressionStrategy, warn_deprecated_once
 from repro.fl.client import local_train
 from repro.fl.server import aggregate, server_update
 
@@ -92,56 +96,176 @@ class RoundMetrics(NamedTuple):
     wire_bytes_up: jax.Array = 0.0
 
 
-def fl_init(params: PyTree, num_clients: int) -> FLState:
-    ef1 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+def fl_init(params: PyTree, num_clients: int,
+            strategy: Optional[CompressionStrategy] = None) -> FLState:
+    """Fresh round state; the EF residual comes from the strategy when one
+    is given (zeros f32 mirroring params otherwise — the same default)."""
+    if strategy is not None:
+        ef1 = strategy.init_ef_state(params)
+    else:
+        ef1 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
     ef = jax.tree_util.tree_map(
         lambda e: jnp.broadcast_to(e, (num_clients, *e.shape)), ef1)
     return FLState(params, ef, jnp.zeros((), jnp.int32))
 
 
-def _check_fanout(cfg: FLConfig, client_parallel: str,
-                  mesh: Optional[Mesh]) -> Optional[Tuple[str, ...]]:
-    """Validate the (client_parallel, mesh) pair; returns the client axes
-    for the shard_map path (None for vmap). The shard-count/divisibility
-    policy is FLShardings' — one source of truth for the mesh contract
-    (imported lazily: sharding.py imports this module at top level)."""
-    if client_parallel not in ("vmap", "shard_map"):
-        raise ValueError(
-            f"client_parallel must be 'vmap' or 'shard_map', got "
-            f"{client_parallel!r}")
-    if client_parallel == "vmap":
-        return None
-    if mesh is None:
-        raise ValueError("client_parallel='shard_map' requires an explicit "
-                         "mesh (see repro.fl.sharding.make_fl_shardings)")
-    from repro.fl.sharding import make_fl_shardings
-    sh = make_fl_shardings(mesh)
-    sh.check_divisible(cfg.num_clients)
-    return sh.axes
-
-
-def _check_wire(cfg: FLConfig, wire: str, codec) -> None:
+def _check_codec(run: RunConfig, strategy: CompressionStrategy,
+                 codec) -> None:
     """Validate the (wire, codec) pair for codec mode."""
-    if wire not in ("float", "codec"):
-        raise ValueError(f"wire must be 'float' or 'codec', got {wire!r}")
-    if wire == "float":
+    if run.wire == "float":
         return
     if codec is None:
         raise ValueError("wire='codec' requires a codec "
                          "(see repro.comm.make_codec)")
-    if codec.kind != cfg.compressor.kind:
+    if codec.kind != strategy.cfg.kind:
         raise ValueError(f"codec kind {codec.kind!r} does not match "
-                         f"compressor kind {cfg.compressor.kind!r}")
-    if cfg.compressor.kind == "threesfc" and codec.policy != "fp32":
+                         f"compressor kind {strategy.cfg.kind!r}")
+    codec.check_round_wire()
+
+
+def build_fl_round(
+    loss_fn: Callable[[PyTree, Dict], jax.Array],
+    strategy: CompressionStrategy,
+    run: RunConfig,
+    *,
+    codec=None,
+) -> Callable[[FLState, PyTree, jax.Array], Tuple[FLState, RoundMetrics]]:
+    """THE round builder: one pipeline over (strategy × fan-out × wire).
+
+    ``run.fused_decode`` requires ``strategy.supports_fused_aggregate``
+    (§Perf beyond-paper optimization): the server aggregates straight from
+    the gathered wire payloads — for 3SFC, since every ĝ_i is evaluated at
+    the same w^t (Eq. 10),
+
+        G(ĝ_1..ĝ_N) = ∇_w (1/N) Σ_i s_i F(D_syn,i, w^t),
+
+    so the all_gather carries ONLY the tiny (D_syn, s) payloads and ONE
+    replicated batched backward replaces the O(d) full-gradient collective.
+    EF stays exact because each client updates its residual locally.
+    """
+    cfg: FLConfig = run.fl
+    mesh: Optional[Mesh] = run.mesh
+    axes = run.client_axes()
+    fused = run.fused_decode
+    if fused and not strategy.supports_fused_aggregate:
         raise ValueError(
-            "the round's wire mode requires the lossless fp32 policy for "
-            "threesfc (client EF runs on the factored (gw, s)); lossy "
-            "policies are a codec-level feature")
+            f"fused_decode requires a strategy with "
+            f"supports_fused_aggregate; {strategy.cfg.kind!r} has none")
+    _check_codec(run, strategy, codec)
+
+    # ---- client phase: local train + strategy encode ----------------------
+    if run.wire == "codec":
+        def encode(key_i, g, ef_i, params, cid, rnd):
+            return strategy.wire_step(key_i, g, ef_i, params, codec=codec,
+                                      round_idx=rnd, client_idx=cid)
+    elif fused:
+        def encode(key_i, g, ef_i, params, cid, rnd):
+            return strategy.payload_step(key_i, g, ef_i, params)
+    else:
+        def encode(key_i, g, ef_i, params, cid, rnd):
+            return strategy.step(key_i, g, ef_i, params)
+
+    def client_step(global_params, ef_i, batches_i, key_i, cid, rnd):
+        g, loss = local_train(loss_fn, global_params, batches_i,
+                              cfg.local_lr, num_micro=run.num_micro)
+        msg, ef_new, metrics = encode(key_i, g, ef_i, global_params,
+                                      cid, rnd)
+        return msg, ef_new, loss, metrics
+
+    in_axes = (None, 0, 0, 0, 0, None)
+
+    # ---- transport boundary: the client fan-out ---------------------------
+    if axes is None:
+        def fanout(params, ef, batches, keys, cids, rnd):
+            return jax.vmap(client_step, in_axes=in_axes)(
+                params, ef, batches, keys, cids, rnd)
+    else:
+        def body(global_params, ef, batches, keys_, cids, rnd):
+            with jax.named_scope(CLIENT_SCOPE):
+                outs = jax.vmap(client_step, in_axes=in_axes)(
+                    global_params, ef, batches, keys_, cids, rnd)
+            # ONE tiled all_gather of every output EXCEPT the
+            # client-resident EF tree — the gathered operands are the wire
+            # (recon trees, wire payloads or framed uint8 buffers).
+            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
+            return tuple(
+                o if i == 1 else jax.tree_util.tree_map(gather, o)
+                for i, o in enumerate(outs))
+
+        fanout = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P()),
+            out_specs=tuple(P(axes) if i == 1 else P() for i in range(4)),
+            check_rep=False,
+        )
+
+    def _replicate(x):
+        # Explicit mesh plumbing for the vmap fused path: with no mesh the
+        # constraint is a no-op by construction (single-process tests);
+        # with one, the payloads are pinned replicated so the batched
+        # backward runs on every device.
+        if mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+    # ---- server phase: decode + aggregate + update + metrics --------------
+    wire_bytes = codec.nbytes if run.wire == "codec" else 0.0
+
+    def finish(state: FLState, agg, ef_new, losses, metrics,
+               payload_floats) -> Tuple[FLState, RoundMetrics]:
+        new_params = server_update(state.params, agg, cfg.server_lr)
+        ef_new = jax.tree_util.tree_map(
+            lambda n, o: n.astype(o.dtype), ef_new, state.ef)
+        rm = RoundMetrics(
+            loss=jnp.mean(losses),
+            cosine=metrics.cosine,
+            payload_floats=payload_floats,
+            update_norm=flat.tree_norm(agg),
+            wire_bytes_up=jnp.float32(wire_bytes),
+        )
+        return FLState(new_params, ef_new, state.round + 1), rm
+
+    def fl_round(state: FLState, client_batches: PyTree, key: jax.Array,
+                 weights: jax.Array = None):
+        keys = jax.random.split(key, cfg.num_clients)
+        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
+        msgs, ef_new, losses, metrics = fanout(
+            state.params, state.ef, client_batches, keys, cids, state.round)
+        if fused:
+            if axes is None:
+                # vmap fan-out: the payloads are tiny -> pin replicated
+                msgs = jax.tree_util.tree_map(_replicate, msgs)
+            payloads = jax.vmap(codec.decode)(msgs) \
+                if run.wire == "codec" else msgs
+            agg = strategy.server_aggregate(state.params, payloads)
+            # scalar, matching the default path's jnp.mean reduction
+            pf = jnp.float32(strategy.payload_floats(state.params))
+            return finish(state, agg, ef_new, losses, metrics, pf)
+        if run.wire == "codec":
+            # (N, nbytes) uint8 -> per-client reconstruction trees
+            canon = jax.vmap(codec.decode)(msgs)
+            recons = jax.vmap(
+                lambda c: codec.recon_tree(c, state.params))(canon)
+        else:
+            recons = msgs
+        # inputs are full (N, ...) arrays in client order on both fan-out
+        # paths, so the reduction order — hence the result — is identical
+        agg = aggregate(recons, weights)
+        return finish(state, agg, ef_new, losses, metrics,
+                      jnp.mean(metrics.payload_floats))
+
+    return fl_round
+
+
+# ---------------------------------------------------------------------------
+# deprecated shim (PR 5): the old 10-knob factory over the new pipeline
+# ---------------------------------------------------------------------------
 
 
 def make_fl_round(
     loss_fn: Callable[[PyTree, Dict], jax.Array],
-    compressor: TreeCompressor,
+    compressor,
     cfg: FLConfig,
     *,
     num_micro: int = 1,
@@ -153,261 +277,24 @@ def make_fl_round(
     wire: str = "float",
     codec=None,
 ) -> Callable[[FLState, PyTree, jax.Array], Tuple[FLState, RoundMetrics]]:
-    """``fused_decode`` (3SFC only, §Perf beyond-paper optimization):
+    """Deprecated: build a ``RunConfig`` and call ``build_fl_round``.
 
-    The naive server path decodes per client (each recon is a FULL
-    param-sized tree) and gathers it over the sharded client axis — an O(d)
-    per-device collective, identical to FedAvg's bill. But since every ĝ_i
-    is evaluated at the same w^t (Eq. 10),
-
-        G(ĝ_1..ĝ_N) = ∇_w (1/N) Σ_i s_i F(D_syn,i, w^t),
-
-    so the server can ALL-GATHER only the tiny (D_syn, s) payloads over the
-    client axis (= the paper's compressed uplink, as wire bytes) and run ONE
-    replicated batched backward. The full-gradient collective disappears;
-    EF stays exact because each client computes its own recon locally.
-
-    ``client_parallel='shard_map'`` + ``mesh`` turns either path into the
-    explicitly sharded fan-out (see module docstring); ``mesh`` alone (with
-    the default vmap fan-out) pins the fused path's replication constraint
-    to that mesh instead of relying on an ambient mesh context.
+    ``compressor`` may be a ``TreeCompressor`` (its strategy is used) or a
+    ``CompressionStrategy`` directly. The legacy ``syn_loss_fn``/``syn_spec``
+    pair is required with ``fused_decode`` for signature compatibility but
+    the strategy's own hooks (identical by construction) do the work.
     """
-    axes = _check_fanout(cfg, client_parallel, mesh)
-    _check_wire(cfg, wire, codec)
-
-    def one_client(global_params, ef_i, batches_i, key_i):
-        g, loss = local_train(loss_fn, global_params, batches_i,
-                              cfg.local_lr, num_micro=num_micro)
-        recon, ef_new, metrics = compressor.step(key_i, g, ef_i, global_params)
-        return recon, ef_new, loss, metrics
-
-    def _server_step(state: FLState, recons, ef_new, losses, metrics,
-                     weights, wire_bytes=0.0) -> Tuple[FLState, RoundMetrics]:
-        """Shared server half: aggregate + update + metrics packaging.
-        Inputs are full (N, ...) arrays in client order on both fan-out
-        paths, so the reduction order — hence the result — is identical."""
-        agg = aggregate(recons, weights)
-        new_params = server_update(state.params, agg, cfg.server_lr)
-        ef_new = jax.tree_util.tree_map(
-            lambda n, o: n.astype(o.dtype), ef_new, state.ef)
-        rm = RoundMetrics(
-            loss=jnp.mean(losses),
-            cosine=metrics.cosine,
-            payload_floats=jnp.mean(metrics.payload_floats),
-            update_norm=flat.tree_norm(agg),
-            wire_bytes_up=jnp.float32(wire_bytes),
-        )
-        return FLState(new_params, ef_new, state.round + 1), rm
-
-    def _shard_fanout(client_fn, *, ef_pos, n_out, extra_in_axes=(),
-                      extra_specs=()):
-        """The ONE shard_map fan-out all four sharded variants share: vmap
-        the local clients inside the (HLO-gated) collective-free
-        ``CLIENT_SCOPE``, then ONE tiled all_gather of every output EXCEPT
-        the client-resident EF tree at ``ef_pos`` — the gathered operands
-        are the wire (full recon trees, (D_syn, s) payloads, or framed
-        uint8 buffers, depending on the variant)."""
-        in_axes = (None, 0, 0, 0) + extra_in_axes
-
-        def body(global_params, ef, batches, keys_, *extra):
-            with jax.named_scope(CLIENT_SCOPE):
-                outs = jax.vmap(client_fn, in_axes=in_axes)(
-                    global_params, ef, batches, keys_, *extra)
-            gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
-            return tuple(
-                o if i == ef_pos else jax.tree_util.tree_map(gather, o)
-                for i, o in enumerate(outs))
-
-        return shard_map(
-            body, mesh=mesh,
-            in_specs=(P(), P(axes), P(axes), P(axes)) + extra_specs,
-            out_specs=tuple(P(axes) if i == ef_pos else P()
-                            for i in range(n_out)),
-            check_rep=False,
-        )
-
-    def fl_round(state: FLState, client_batches: PyTree, key: jax.Array,
-                 weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        recons, ef_new, losses, metrics = jax.vmap(
-            one_client, in_axes=(None, 0, 0, 0))(
-            state.params, state.ef, client_batches, keys)
-        return _server_step(state, recons, ef_new, losses, metrics, weights)
-
-    # ---- codec wire mode: only framed uint8 buffers cross the boundary ----
-
-    def one_client_wire(global_params, ef_i, batches_i, key_i, cid, rnd):
-        g, loss = local_train(loss_fn, global_params, batches_i,
-                              cfg.local_lr, num_micro=num_micro)
-        buf, ef_new, metrics = compressor.wire_step(
-            key_i, g, ef_i, global_params, codec=codec,
-            round_idx=rnd, client_idx=cid)
-        return buf, ef_new, loss, metrics
-
-    def _decode_recons(bufs, params):
-        """(N, nbytes) uint8 -> per-client reconstruction trees (server)."""
-        canon = jax.vmap(codec.decode)(bufs)
-        return jax.vmap(lambda c: codec.recon_tree(c, params))(canon)
-
-    def fl_round_wire(state: FLState, client_batches: PyTree, key: jax.Array,
-                      weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
-        bufs, ef_new, losses, metrics = jax.vmap(
-            one_client_wire, in_axes=(None, 0, 0, 0, 0, None))(
-            state.params, state.ef, client_batches, keys, cids, state.round)
-        recons = _decode_recons(bufs, state.params)
-        return _server_step(state, recons, ef_new, losses, metrics, weights,
-                            wire_bytes=codec.nbytes)
-
-    def fl_round_wire_shard(state: FLState, client_batches: PyTree,
-                            key: jax.Array, weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
-        # the wire: framed uint8 buffers only — N * codec.nbytes per round
-        bufs, ef_new, losses, metrics = _shard_fanout(
-            one_client_wire, ef_pos=1, n_out=4,
-            extra_in_axes=(0, None), extra_specs=(P(axes), P()))(
-            state.params, state.ef, client_batches, keys, cids, state.round)
-        recons = _decode_recons(bufs, state.params)
-        return _server_step(state, recons, ef_new, losses, metrics, weights,
-                            wire_bytes=codec.nbytes)
-
-    def fl_round_shard(state: FLState, client_batches: PyTree, key: jax.Array,
-                       weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        # the wire: the gathered recons are O(d) per device — FedAvg's bill
-        recons, ef_new, losses, metrics = _shard_fanout(
-            one_client, ef_pos=1, n_out=4)(
-            state.params, state.ef, client_batches, keys)
-        return _server_step(state, recons, ef_new, losses, metrics, weights)
-
-    if not fused_decode:
-        if wire == "codec":
-            return fl_round_wire if axes is None else fl_round_wire_shard
-        return fl_round if axes is None else fl_round_shard
-
-    assert syn_loss_fn is not None and syn_spec is not None, \
-        "fused_decode needs the 3SFC syn_loss_fn + syn_spec"
-    from repro.core import threesfc
-    from repro.kernels import ops
-
-    ccfg = cfg.compressor
-
-    def one_client_fused(global_params, ef_i, batches_i, key_i):
-        g, loss = local_train(loss_fn, global_params, batches_i,
-                              cfg.local_lr, num_micro=num_micro)
-        u = flat.tree_add(g, ef_i) if ccfg.error_feedback else g
-        syn0 = threesfc.init_syn(key_i, syn_spec)
-        res = threesfc.encode(syn_loss_fn, global_params, u, syn0,
-                              steps=ccfg.syn_steps, lr=ccfg.syn_lr,
-                              lam=ccfg.l2_coef)
-        # EF update is client-local (recon never crosses the network); the
-        # fused e' = u − s·∇F stream means the recon tree is NEVER
-        # materialized on this path — the server rebuilds it from (D_syn, s).
-        ef_new = ops.tree_ef_update(u, res.gw, res.s) \
-            if ccfg.error_feedback else ef_i
-        return res.syn, res.s, ef_new, loss, res.cosine
-
-    def _replicate(x):
-        # Explicit mesh plumbing: with no mesh the constraint is a no-op by
-        # construction (single-process tests); with one, the payloads are
-        # pinned replicated so the batched backward runs on every device.
-        if mesh is None:
-            return x
-        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
-
-    def _fused_server_step(state, syns, ss, ef_new, losses, cosines,
-                           wire_bytes=0.0):
-        """Shared fused server half: ONE replicated batched backward over
-        the gathered (D_syn, s) payloads (identical on both fan-out paths)."""
-        def total_loss(w):
-            per = jax.vmap(lambda sy: syn_loss_fn(w, sy))(syns)   # (N,)
-            return jnp.mean(jax.lax.stop_gradient(ss) * per)
-
-        agg = jax.grad(total_loss)(state.params)                  # ONE backward
-        new_params = server_update(state.params, agg, cfg.server_lr)
-        ef_new = jax.tree_util.tree_map(
-            lambda n, o: n.astype(o.dtype), ef_new, state.ef)
-        rm = RoundMetrics(
-            loss=jnp.mean(losses),
-            cosine=cosines,
-            # scalar, matching the default path's jnp.mean reduction
-            payload_floats=jnp.float32(syn_spec.floats + 1),
-            update_norm=flat.tree_norm(agg),
-            wire_bytes_up=jnp.float32(wire_bytes),
-        )
-        return FLState(new_params, ef_new, state.round + 1), rm
-
-    def fl_round_fused(state: FLState, client_batches: PyTree,
-                       key: jax.Array, weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        syns, ss, ef_new, losses, cosines = jax.vmap(
-            one_client_fused, in_axes=(None, 0, 0, 0))(
-            state.params, state.ef, client_batches, keys)
-        # the wire: the payloads are tiny -> replicated
-        syns = jax.tree_util.tree_map(_replicate, syns)
-        ss = _replicate(ss)
-        return _fused_server_step(state, syns, ss, ef_new, losses, cosines)
-
-    def fl_round_fused_shard(state: FLState, client_batches: PyTree,
-                             key: jax.Array, weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        # the wire: all-gather ONLY the (D_syn, s) payloads — O(N·payload)
-        # bytes, never the O(d) reconstruction trees
-        syns, ss, ef_new, losses, cosines = _shard_fanout(
-            one_client_fused, ef_pos=2, n_out=5)(
-            state.params, state.ef, client_batches, keys)
-        return _fused_server_step(state, syns, ss, ef_new, losses, cosines)
-
-    # ---- fused + codec wire: the gathered payload IS the encoded frame ----
-
-    def one_client_fused_wire(global_params, ef_i, batches_i, key_i, cid, rnd):
-        g, loss = local_train(loss_fn, global_params, batches_i,
-                              cfg.local_lr, num_micro=num_micro)
-        u = flat.tree_add(g, ef_i) if ccfg.error_feedback else g
-        syn0 = threesfc.init_syn(key_i, syn_spec)
-        res = threesfc.encode(syn_loss_fn, global_params, u, syn0,
-                              steps=ccfg.syn_steps, lr=ccfg.syn_lr,
-                              lam=ccfg.l2_coef)
-        buf = codec.encode((res.syn, res.s), round_idx=rnd, client_idx=cid)
-        ef_new = ops.tree_ef_update(u, res.gw, res.s) \
-            if ccfg.error_feedback else ef_i
-        return buf, ef_new, loss, res.cosine
-
-    def _decode_payloads(bufs):
-        """(N, nbytes) uint8 -> batched (D_syn, s) for the server backward."""
-        syns, ss = jax.vmap(codec.decode)(bufs)
-        return syns, ss
-
-    def fl_round_fused_wire(state: FLState, client_batches: PyTree,
-                            key: jax.Array, weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
-        bufs, ef_new, losses, cosines = jax.vmap(
-            one_client_fused_wire, in_axes=(None, 0, 0, 0, 0, None))(
-            state.params, state.ef, client_batches, keys, cids, state.round)
-        syns, ss = _decode_payloads(_replicate(bufs))
-        return _fused_server_step(state, syns, ss, ef_new, losses, cosines,
-                                  wire_bytes=codec.nbytes)
-
-    def fl_round_fused_wire_shard(state: FLState, client_batches: PyTree,
-                                  key: jax.Array, weights: jax.Array = None):
-        keys = jax.random.split(key, cfg.num_clients)
-        cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
-        # the wire: all-gather ONLY the framed (D_syn, s) bytes —
-        # O(N·nbytes), the paper's compressed uplink as measured bytes
-        bufs, ef_new, losses, cosines = _shard_fanout(
-            one_client_fused_wire, ef_pos=1, n_out=4,
-            extra_in_axes=(0, None), extra_specs=(P(axes), P()))(
-            state.params, state.ef, client_batches, keys, cids, state.round)
-        syns, ss = _decode_payloads(bufs)
-        return _fused_server_step(state, syns, ss, ef_new, losses, cosines,
-                                  wire_bytes=codec.nbytes)
-
-    if wire == "codec":
-        return fl_round_fused_wire if axes is None else fl_round_fused_wire_shard
-    return fl_round_fused if axes is None else fl_round_fused_shard
+    warn_deprecated_once(
+        "make_fl_round",
+        "repro.fl.round.build_fl_round(loss_fn, strategy, RunConfig(...))")
+    if fused_decode:
+        assert syn_loss_fn is not None and syn_spec is not None, \
+            "fused_decode needs the 3SFC syn_loss_fn + syn_spec"
+    strategy = getattr(compressor, "strategy", compressor)
+    run = RunConfig(fl=cfg, client_parallel=client_parallel, wire=wire,
+                    fused_decode=fused_decode, num_micro=num_micro,
+                    mesh=mesh)
+    return build_fl_round(loss_fn, strategy, run, codec=codec)
 
 
 # convenience alias used in docs/examples

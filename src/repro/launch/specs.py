@@ -25,8 +25,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import (CompressorConfig, FLConfig, INPUT_SHAPES,
                                 ModelConfig, ShapeConfig, get_config)
-from repro.core.compressor import make_compressor
-from repro.fl.round import FLState, make_fl_round
+from repro.configs.run import RunConfig
+from repro.core.strategy import make_strategy
+from repro.fl.round import FLState, build_fl_round
 from repro.launch import mesh as mesh_lib
 from repro.models import params as params_lib
 from repro.models.build import ENC_SYN_LEN, build_model, syn_loss_fn, syn_spec_for
@@ -193,16 +194,16 @@ def make_train_entry(cfg: ModelConfig, shape: ShapeConfig, mesh,
     fl = _dc.replace(fl, num_clients=num_clients)
     model = build_model(cfg)
     sspec = syn_spec_for(cfg, fl.compressor)
-    comp = make_compressor(fl.compressor, loss_fn=syn_loss_fn(model),
-                           syn_spec=sspec, local_lr=fl.local_lr)
+    strategy = make_strategy(fl.compressor, loss_fn=syn_loss_fn(model),
+                             syn_spec=sspec, local_lr=fl.local_lr)
     # microbatching keeps per-step live activations ~1 sequence deep
     num_micro = min(per_client, 8) if shape.seq_len >= 4096 else 1
     while per_client % num_micro:
         num_micro -= 1
-    round_fn = make_fl_round(model.loss, comp, fl, num_micro=num_micro,
-                             fused_decode=fused_decode,
-                             syn_loss_fn=syn_loss_fn(model), syn_spec=sspec,
-                             client_parallel=client_parallel, mesh=mesh)
+    run = RunConfig(fl=fl, client_parallel=client_parallel,
+                    fused_decode=fused_decode, num_micro=num_micro,
+                    mesh=mesh)
+    round_fn = build_fl_round(model.loss, strategy, run)
 
     K, B, S = fl.local_steps, per_client, shape.seq_len
     pspecs = param_specs(model, mesh)

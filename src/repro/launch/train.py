@@ -10,10 +10,16 @@ Both paths drive ``repro.fl.engine.RoundEngine``: data and Dirichlet pools
 are device-resident, each eval block of ``--eval-every`` rounds is ONE
 scanned dispatch with the EF state donated in place, and compressor budgets
 come from the shared ``repro.fl.budget`` module (the same construction the
-benchmarks use).
+benchmarks use). The flags are folded into ONE validated
+``repro.configs.run.RunConfig`` (logged as ``run_config.json`` next to the
+metrics) and the round is built by ``repro.fl.round.build_fl_round`` over
+the compressor's registered strategy; ``--wire codec`` ships framed uint8
+buffers across the client/server boundary instead of float trees.
 
     PYTHONPATH=src python -m repro.launch.train --model mlp --dataset mnist \
         --compressor threesfc --rounds 200 --clients 10
+    PYTHONPATH=src python -m repro.launch.train --model mlp --wire codec \
+        --rounds 50 --clients 10     # measured serialized uplink bytes
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --smoke --rounds 20          # reduced LM config, token data
 """
@@ -29,16 +35,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.configs.base import (ARCH_IDS, CompressorConfig, FLConfig,
-                                get_smoke_config)
+from repro.configs.base import ARCH_IDS, CompressorConfig, get_smoke_config
+from repro.configs.run import RunConfig
 from repro.core import flat
-from repro.core.compressor import make_compressor
+from repro.core.strategy import make_strategy
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset, make_token_dataset
 from repro.fl.budget import matched_compressors
 from repro.fl.engine import (RoundEngine, device_pools, token_batcher,
                              vision_batcher)
-from repro.fl.round import make_fl_round
+from repro.fl.round import build_fl_round
 from repro.fl.sharding import make_fl_shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.build import build_model, syn_loss_fn, syn_spec_for, vision_syn_spec
@@ -72,6 +78,13 @@ def make_fanout(args):
     return "shard_map", mesh, shardings
 
 
+def _write_run_config(out_dir: str, run: RunConfig) -> None:
+    """Log the run's exact configuration next to its metrics."""
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "run_config.json"), "w") as f:
+        json.dump(run.to_json(), f, indent=1)
+
+
 def train_vision(args):
     spec = DATASETS[args.dataset]
     model = make_paper_model(args.model, spec)
@@ -79,11 +92,13 @@ def train_vision(args):
     d = flat.tree_size(params)
     comp = matched_compressors(args.model, spec, d)[args.compressor]
     syn_spec = vision_syn_spec(spec, comp)
-    compressor = make_compressor(comp, loss_fn=model.syn_loss, syn_spec=syn_spec,
-                                 local_lr=args.lr)
-    fl_cfg = FLConfig(num_clients=args.clients, local_steps=args.local_steps,
-                      local_lr=args.lr, local_batch=args.batch,
-                      compressor=comp, seed=args.seed)
+    strategy = make_strategy(comp, loss_fn=model.syn_loss, syn_spec=syn_spec,
+                             local_lr=args.lr)
+    mode, mesh, shardings = make_fanout(args)
+    run = RunConfig.from_flags(args, compressor=comp, client_parallel=mode,
+                               mesh=mesh)
+    codec = strategy.wire_codec(params, policy=run.wire_policy) \
+        if run.wire == "codec" else None
 
     key = jax.random.PRNGKey(args.seed)
     train = make_class_image_dataset(key, args.train_size, spec.input_shape,
@@ -92,22 +107,20 @@ def train_vision(args):
                                     spec.input_shape, spec.num_classes)
     parts = dirichlet_partition(train.y, args.clients, alpha=args.alpha,
                                 seed=args.seed, min_per_client=args.batch)
-    mode, mesh, shardings = make_fanout(args)
     pools = device_pools(parts)
     if shardings is not None:
         pools = shardings.place_pools(pools)
     engine = RoundEngine(
-        make_fl_round(model.loss, compressor, fl_cfg,
-                      client_parallel=mode, mesh=mesh),
+        build_fl_round(model.loss, strategy, run, codec=codec),
         vision_batcher(train.x, train.y, pools, args.local_steps, args.batch),
         seed=args.seed, shardings=shardings)
-    state = engine.init_state(params, args.clients)
+    state = engine.init_state(params, args.clients, strategy)
 
     @jax.jit
     def eval_acc(p):
         return accuracy(model.apply(p, jnp.asarray(test.x)), jnp.asarray(test.y))
 
-    os.makedirs(args.out, exist_ok=True)
+    _write_run_config(args.out, run)
     t0 = time.time()
     with open(os.path.join(args.out, "metrics.jsonl"), "w") as log:
         def on_eval(st, m, r):
@@ -137,12 +150,14 @@ def train_lm_smoke(args):
                             else "identity",
                             error_feedback=args.compressor != "fedavg",
                             syn_steps=10, syn_lr=0.1, syn_seq=8)
-    compressor = make_compressor(comp, loss_fn=syn_loss_fn(model),
-                                 syn_spec=syn_spec_for(cfg, comp),
-                                 local_lr=args.lr)
-    fl_cfg = FLConfig(num_clients=args.clients, local_steps=args.local_steps,
-                      local_lr=args.lr, local_batch=args.batch,
-                      compressor=comp, seed=args.seed)
+    strategy = make_strategy(comp, loss_fn=syn_loss_fn(model),
+                             syn_spec=syn_spec_for(cfg, comp),
+                             local_lr=args.lr)
+    mode, mesh, shardings = make_fanout(args)
+    run = RunConfig.from_flags(args, compressor=comp, client_parallel=mode,
+                               mesh=mesh)
+    codec = strategy.wire_codec(params, policy=run.wire_policy) \
+        if run.wire == "codec" else None
 
     S = 64
     data = make_token_dataset(jax.random.PRNGKey(args.seed), 2048, S,
@@ -152,21 +167,19 @@ def train_lm_smoke(args):
         extras["frames"] = (cfg.num_mm_tokens, cfg.d_model)
     elif cfg.num_mm_tokens:
         extras["prefix_embeds"] = (cfg.num_mm_tokens, cfg.d_model)
-    mode, mesh, shardings = make_fanout(args)
     engine = RoundEngine(
-        make_fl_round(model.loss, compressor, fl_cfg,
-                      client_parallel=mode, mesh=mesh),
+        build_fl_round(model.loss, strategy, run, codec=codec),
         token_batcher(data, args.clients, args.local_steps, args.batch,
                       extras=extras),
         seed=args.seed, shardings=shardings)
-    state = engine.init_state(params, args.clients)
+    state = engine.init_state(params, args.clients, strategy)
     engine.run(state, args.rounds, eval_every=args.eval_every,
                eval_fn=lambda st, m, r: print(json.dumps(
                    {"round": r, "loss": float(m.loss[-1]),
                     "cos": float(np.mean(m.cosine[-1])), "params": d})))
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mlp",
                     choices=["mlp", "mnistnet", "convnet", "resnet", "regnet"])
@@ -189,8 +202,12 @@ def main():
                     choices=["auto", "vmap", "shard_map"],
                     help="client fan-out: sharded over the host mesh "
                          "(shard_map) or single-program vmap")
+    ap.add_argument("--wire", default="float", choices=["float", "codec"],
+                    help="what crosses the client/server boundary: float "
+                         "trees (accounted bytes) or the repro.comm codec's "
+                         "framed uint8 buffers (measured bytes)")
     ap.add_argument("--out", default="experiments/train_run")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.arch and args.smoke:
         train_lm_smoke(args)
     else:

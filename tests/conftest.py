@@ -28,11 +28,12 @@ def run_multidev(args, timeout=1200):
 
 @pytest.fixture(scope="session")
 def multidev_scenario():
-    """Session fixture running one tests/test_shard_round.py child scenario
-    on 8 forced host devices and asserting it exits clean."""
+    """Session fixture running one child scenario (``__main__`` entry of
+    ``file``, default tests/test_shard_round.py) on 8 forced host devices
+    and asserting it exits clean."""
 
-    def run_scenario(scenario, timeout=1200):
-        p = run_multidev(["tests/test_shard_round.py", scenario], timeout)
+    def run_scenario(scenario, timeout=1200, file="tests/test_shard_round.py"):
+        p = run_multidev([file, scenario], timeout)
         assert p.returncode == 0, (
             f"scenario {scenario!r} failed (exit {p.returncode})\n"
             f"--- stdout ---\n{p.stdout}\n--- stderr ---\n{p.stderr}")

@@ -1,0 +1,130 @@
+"""Public-API snapshot: the exported names of the four runtime packages.
+
+The golden lists below are the PR 5 contract. A future refactor that adds,
+renames or drops an export must update this file deliberately — silent
+surface drift fails here first. Module attributes are excluded (submodule
+imports are an implementation detail); everything else a user can reach as
+``repro.<pkg>.<name>`` is pinned.
+
+Also pins the deprecation behavior of the two legacy entry points: the
+``make_compressor``/``make_fl_round`` shims emit ``DeprecationWarning``
+exactly once per process each, then go quiet.
+"""
+import types
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+GOLDEN = {
+    "repro.core": [
+        "CompressionStrategy", "make_strategy", "register_strategy",
+        "strategy_kinds",
+    ],
+    "repro.fl": [
+        "ClientPools", "EngineStats", "FLShardings", "FLState",
+        "RoundEngine", "aggregate", "build_fl_round", "device_pools",
+        "fl_init", "fl_round", "local_train", "make_fl_round",
+        "make_fl_shardings", "matched_compressors", "payload_budget",
+        "server_update", "token_batcher", "vision_batcher",
+    ],
+    "repro.comm": [
+        "CODECS", "Codec", "FrameSpec", "InProcessChannel", "LinkStats",
+        "make_codec", "parse_header", "register_codec", "register_kind_id",
+        "wire_bytes",
+    ],
+    "repro.configs": [
+        "ARCH_IDS", "CompressorConfig", "FLConfig", "INPUT_SHAPES",
+        "ModelConfig", "RunConfig", "ShapeConfig", "get_config",
+        "get_smoke_config", "list_archs",
+    ],
+}
+
+
+@pytest.mark.parametrize("modname", sorted(GOLDEN))
+def test_exported_names_pinned(modname):
+    import importlib
+
+    mod = importlib.import_module(modname)
+    actual = sorted(n for n, v in vars(mod).items()
+                    if not n.startswith("_")
+                    and not isinstance(v, types.ModuleType))
+    assert actual == GOLDEN[modname], (
+        f"{modname} exports changed; update the golden list DELIBERATELY "
+        f"(added: {sorted(set(actual) - set(GOLDEN[modname]))}, "
+        f"removed: {sorted(set(GOLDEN[modname]) - set(actual))})")
+
+
+def test_builtin_strategy_kinds_pinned():
+    from repro.core.strategy import STRATEGIES
+
+    builtin = {"identity", "topk", "randk", "signsgd", "stc", "threesfc",
+               "fedsynth"}
+    assert builtin <= set(STRATEGIES), sorted(STRATEGIES)
+
+
+def _one_warning_only(fn):
+    """Call ``fn`` twice; return the DeprecationWarnings raised in total."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fn()
+        fn()
+    return [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_deprecated_shims_warn_exactly_once():
+    from repro.configs.base import CompressorConfig, FLConfig
+    from repro.core import strategy as S
+    from repro.core.compressor import make_compressor
+    from repro.fl.round import make_fl_round
+    from repro.models.cnn import VisionSpec, make_paper_model
+
+    model = make_paper_model("mlp", VisionSpec("tiny", (4, 4, 1), 3))
+    ccfg = CompressorConfig(kind="topk", keep_ratio=0.2)
+    cfg = FLConfig(num_clients=2, compressor=ccfg)
+
+    # reset the once-latch: earlier tests in the session may have tripped it
+    S._DEPRECATION_SEEN.clear()
+    ws = _one_warning_only(lambda: make_compressor(ccfg))
+    assert len(ws) == 1 and "make_compressor" in str(ws[0].message), ws
+
+    comp = make_compressor(ccfg)
+    ws = _one_warning_only(lambda: make_fl_round(model.loss, comp, cfg))
+    assert len(ws) == 1 and "make_fl_round" in str(ws[0].message), ws
+
+    # the shims still produce a working round function
+    rf = make_fl_round(model.loss, comp, cfg)
+    from repro.fl.round import fl_init
+    params = model.init(jax.random.PRNGKey(0))
+    batches = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (2, 1, 4, 4, 4, 1)),
+        "y": jax.random.randint(jax.random.PRNGKey(2), (2, 1, 4), 0, 3),
+    }
+    state, m = rf(fl_init(params, 2), batches, jax.random.PRNGKey(3))
+    assert np.isfinite(float(m.loss))
+
+
+def test_run_config_validates_and_roundtrips():
+    import json
+
+    from repro.configs.base import CompressorConfig, FLConfig
+    from repro.configs.run import RunConfig
+
+    with pytest.raises(ValueError, match="'float' or 'codec'"):
+        RunConfig(wire="bytes")
+    with pytest.raises(ValueError, match="'vmap' or 'shard_map'"):
+        RunConfig(client_parallel="pmap")
+    with pytest.raises(ValueError, match="requires an explicit mesh"):
+        RunConfig(client_parallel="shard_map")
+    with pytest.raises(ValueError, match="num_micro"):
+        RunConfig(num_micro=0)
+
+    run = RunConfig(
+        fl=FLConfig(num_clients=4, local_steps=2, local_lr=0.05,
+                    compressor=CompressorConfig(kind="stc", keep_ratio=0.1)),
+        wire="codec", fused_decode=False, num_micro=2)
+    # through actual JSON text, not just dicts
+    back = RunConfig.from_json(json.loads(json.dumps(run.to_json())))
+    assert back == run
+    assert back.fl.compressor.kind == "stc"
