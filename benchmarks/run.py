@@ -14,10 +14,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_collectives, bench_fedsynth, bench_fig1,
-                        bench_fig7, bench_kernels, bench_round_engine,
-                        bench_ssweep, bench_table2, bench_table3,
-                        bench_table4, bench_wire)
+from benchmarks import (bench_collectives, bench_faults, bench_fedsynth,
+                        bench_fig1, bench_fig7, bench_kernels,
+                        bench_round_engine, bench_ssweep, bench_table2,
+                        bench_table3, bench_table4, bench_wire)
 
 BENCHES = {
     "fig1": bench_fig1.run,          # convergence vs rate
@@ -31,6 +31,7 @@ BENCHES = {
     "round_engine": bench_round_engine.run,  # scanned engine vs python loop
     "collectives": bench_collectives.run,    # sharded fan-out wire bytes
     "wire": bench_wire.run,                  # serialized codec bytes + parity
+    "faults": bench_faults.run,              # dropout/staleness degradation
 }
 
 

@@ -24,6 +24,12 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
   any new host sync or dispatch per round (structural counters, exact),
   any per-round upload bytes, or any ``pass_*`` gate flipping false.
 
+* ``BENCH_faults.json``: the zero-fault bitwise gate false (fresh-run
+  absolute — a fault pipeline that perturbs healthy rounds is a bug
+  regardless of HEAD), any increase in fedavg/threesfc 30%-dropout
+  rounds-to-target vs HEAD, or the dropout-convergence gate flipping
+  false.
+
 Artifacts present in the working tree but not at HEAD are new benches:
 reported and skipped. Exit 2 on usage/setup errors (not a git checkout,
 malformed JSON).
@@ -166,11 +172,38 @@ def check_wire(fresh, base, tol):
     return probs
 
 
+def check_faults(fresh, base, tol):
+    probs = []
+    # absolute: the zero-fault bitwise identity is a correctness property
+    # of the round pipeline, not a trajectory — losing it is a bug even in
+    # the commit that introduces the bench
+    if _get(fresh, "pass_zero_fault_bitwise") is False:
+        bw = _get(fresh, "zero_fault_bitwise") or {}
+        bad = sorted(k for k, v in bw.items() if not v)
+        probs.append("pass_zero_fault_bitwise is false: null fault schedule "
+                     f"no longer bitwise the unfaulted round ({bad})")
+    # vs HEAD: 30%-dropout rounds-to-target must not regress per method
+    for m in ("fedavg", "threesfc"):
+        f_r = _get(fresh, f"grid.{m}.drop30_k0.rounds_to_target")
+        b_r = _get(base, f"grid.{m}.drop30_k0.rounds_to_target")
+        if b_r is not None and f_r is None:
+            probs.append(f"{m}: no longer reaches target under 30% dropout "
+                         f"(was {b_r} rounds)")
+        elif f_r is not None and b_r is not None and f_r > b_r:
+            probs.append(f"{m}: 30%-dropout rounds-to-target regressed "
+                         f"{b_r} -> {f_r}")
+    for gate in ("pass", "pass_dropout_convergence"):
+        if _get(base, gate) and not _get(fresh, gate):
+            probs.append(f"{gate} gate flipped to false")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
     "BENCH_collectives.json": check_collectives,
     "BENCH_wire.json": check_wire,
+    "BENCH_faults.json": check_faults,
 }
 
 

@@ -4,13 +4,15 @@
 ``codec``  — per-compressor encode/decode between payloads and uint8 frames,
              registered per ``CompressorConfig.kind`` (``register_codec``).
 ``channel``— in-process transport moving only encoded buffers, with byte
-             counters.
+             counters; ``FaultyChannel`` injects seeded transport faults
+             (drop/truncate/bit-flip) for the fault harness.
 """
-from repro.comm.channel import InProcessChannel, LinkStats
+from repro.comm.channel import FaultyChannel, InProcessChannel, LinkStats
 from repro.comm.codec import (CODECS, Codec, make_codec, register_codec,
                               wire_bytes)
-from repro.comm.frame import FrameSpec, parse_header, register_kind_id
+from repro.comm.frame import (FrameError, FrameSpec, parse_header,
+                              register_kind_id)
 
-__all__ = ["CODECS", "Codec", "FrameSpec", "InProcessChannel", "LinkStats",
-           "make_codec", "parse_header", "register_codec",
-           "register_kind_id", "wire_bytes"]
+__all__ = ["CODECS", "Codec", "FaultyChannel", "FrameError", "FrameSpec",
+           "InProcessChannel", "LinkStats", "make_codec", "parse_header",
+           "register_codec", "register_kind_id", "wire_bytes"]

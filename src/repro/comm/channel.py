@@ -7,11 +7,17 @@ server half receives host copies, with per-round uplink/downlink byte
 counters. It is deliberately host-level — the jitted round keeps buffers on
 device; this channel is how the *driver* layer (benchmarks, future async /
 multi-process transports on the ROADMAP) moves and bills them.
+
+``FaultyChannel`` wraps any channel with seeded transport-fault injection
+(frame drop / truncation / bit flips) for the fault harness: corrupted
+frames reach the receiver, whose ``frame.parse_header`` rejects them with a
+typed ``FrameError`` that the driver maps to dropout via the retry policy
+(``repro.fl.engine.RoundEngine.deliver``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -25,10 +31,15 @@ class LinkStats:
     per_round: List[int] = dataclasses.field(default_factory=list)
 
     def _record(self, nbytes: int):
+        # a send must land in an explicitly opened per-round bucket —
+        # an implicit round-0 bucket would silently skew per_round
+        # accounting (begin_round() opens one)
+        if not self.per_round:
+            raise RuntimeError(
+                "send before begin_round(): open a per-round accounting "
+                "bucket first")
         self.total_bytes += nbytes
         self.messages += 1
-        if not self.per_round:
-            self.per_round.append(0)
         self.per_round[-1] += nbytes
 
     def _new_round(self):
@@ -75,3 +86,74 @@ class InProcessChannel:
         b = self._as_wire(buf)
         self.downlink._record(b.nbytes)
         return b
+
+
+class FaultyChannel:
+    """Seeded transport-fault injector over an inner channel.
+
+    Each send first pays the inner channel's billing (the bytes were
+    transmitted — corruption happens on the wire, not before it), then the
+    frame is independently dropped (returns ``None``), truncated to a
+    random prefix, or hit with single-bit flips, with the configured
+    probabilities. Faults are deterministic from ``seed`` and the send
+    sequence, so a fuzz failure replays exactly.
+    """
+
+    def __init__(self, inner: Optional[InProcessChannel] = None, *,
+                 drop_prob: float = 0.0, truncate_prob: float = 0.0,
+                 bitflip_prob: float = 0.0, max_bitflips: int = 8,
+                 seed: int = 0):
+        for name, p in (("drop_prob", drop_prob),
+                        ("truncate_prob", truncate_prob),
+                        ("bitflip_prob", bitflip_prob)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        self.inner = InProcessChannel() if inner is None else inner
+        self.drop_prob = drop_prob
+        self.truncate_prob = truncate_prob
+        self.bitflip_prob = bitflip_prob
+        self.max_bitflips = max_bitflips
+        self._rng = np.random.default_rng(seed)
+        self.dropped = 0
+        self.corrupted = 0
+
+    # accounting passthrough
+    @property
+    def uplink(self) -> LinkStats:
+        return self.inner.uplink
+
+    @property
+    def downlink(self) -> LinkStats:
+        return self.inner.downlink
+
+    @property
+    def round(self) -> int:
+        return self.inner.round
+
+    def begin_round(self) -> int:
+        return self.inner.begin_round()
+
+    def _corrupt(self, b: np.ndarray) -> Optional[np.ndarray]:
+        r = self._rng
+        if r.random() < self.drop_prob:
+            self.dropped += 1
+            return None
+        if r.random() < self.truncate_prob and b.size > 0:
+            self.corrupted += 1
+            return b[: int(r.integers(0, b.size))].copy()
+        if r.random() < self.bitflip_prob and b.size > 0:
+            self.corrupted += 1
+            b = b.copy()
+            for _ in range(int(r.integers(1, self.max_bitflips + 1))):
+                pos = int(r.integers(0, b.size))
+                b[pos] ^= np.uint8(1 << int(r.integers(0, 8)))
+            return b
+        return b
+
+    def send_up(self, buf) -> Optional[np.ndarray]:
+        """Client -> server through the faulty wire: the delivered frame,
+        possibly corrupted, or ``None`` when the wire ate it."""
+        return self._corrupt(self.inner.send_up(buf))
+
+    def send_down(self, buf) -> Optional[np.ndarray]:
+        return self._corrupt(self.inner.send_down(buf))

@@ -40,6 +40,37 @@ MAGIC = b"3W"
 WIRE_VERSION = 1
 HEADER_BYTES = 24
 
+
+class FrameError(ValueError):
+    """A buffer that is not a valid wire frame.
+
+    Base of every typed rejection ``parse_header`` can raise — transport
+    drivers catch THIS (one except clause) and map it to client dropout
+    plus the retry/give-up policy (``repro.fl.engine.RetryPolicy``). A
+    ``ValueError`` subclass so pre-existing callers keep working.
+    """
+
+
+class TruncatedFrameError(FrameError):
+    """Buffer ends before the fixed header or its section table does."""
+
+
+class BadMagicError(FrameError):
+    """First two bytes are not the frame magic — not one of our frames."""
+
+
+class BadVersionError(FrameError):
+    """Unsupported wire version byte."""
+
+
+class CorruptHeaderError(FrameError):
+    """Header fields decode to nothing registered (kind/policy id)."""
+
+
+class FrameSizeError(FrameError):
+    """Internal sizes disagree: payload sum vs header, or buffer length
+    vs the frame's self-description (e.g. truncated mid-payload)."""
+
 # Stable on-the-wire ids; append only, never renumber.
 KIND_IDS: Dict[str, int] = {
     "identity": 0, "topk": 1, "randk": 2, "signsgd": 3, "stc": 4,
@@ -147,24 +178,34 @@ def encode_header(spec: FrameSpec, round_idx=0, client_idx=0) -> jax.Array:
 
 
 def parse_header(buf) -> Dict:
-    """Host-side: validate and read back a buffer's self-description."""
+    """Host-side: validate and read back a buffer's self-description.
+
+    Every rejection is a typed ``FrameError`` subclass — never a cryptic
+    unpack/KeyError — so a transport driver can catch one exception class
+    and treat the sender as dropped (fuzz-tested in tests/test_faults.py).
+    """
     b = np.asarray(buf, np.uint8)
     if b.ndim != 1 or b.size < HEADER_BYTES:
-        raise ValueError(f"frame too short: {b.shape}")
+        raise TruncatedFrameError(f"frame too short: {b.shape}")
     if bytes(b[0:2].tobytes()) != MAGIC:
-        raise ValueError(f"bad magic {b[:2]!r}")
+        raise BadMagicError(f"bad magic {b[:2]!r}")
     if int(b[2]) != WIRE_VERSION:
-        raise ValueError(f"unsupported wire version {int(b[2])}")
+        raise BadVersionError(f"unsupported wire version {int(b[2])}")
+    kind_id, policy_id = int(b[3]), int(b[4])
+    if kind_id not in KIND_NAMES:
+        raise CorruptHeaderError(f"unknown kind id {kind_id}")
+    if policy_id not in POLICY_NAMES:
+        raise CorruptHeaderError(f"unknown dtype policy id {policy_id}")
     n_sections = int(b[5])
     header_bytes = HEADER_BYTES + 4 * n_sections
     if b.size < header_bytes:
-        raise ValueError("frame shorter than its section table")
+        raise TruncatedFrameError("frame shorter than its section table")
     u32 = lambda o: int(np.frombuffer(b[o:o + 4].tobytes(), np.uint32)[0])
     sections = tuple(
         u32(HEADER_BYTES + 4 * i) for i in range(n_sections))
     out = {
-        "kind": KIND_NAMES[int(b[3])],
-        "policy": POLICY_NAMES[int(b[4])],
+        "kind": KIND_NAMES[kind_id],
+        "policy": POLICY_NAMES[policy_id],
         "round": u32(8),
         "client": u32(12),
         "payload_bytes": u32(16),
@@ -173,8 +214,9 @@ def parse_header(buf) -> Dict:
         "nbytes": header_bytes + sum(sections),
     }
     if out["payload_bytes"] != sum(sections):
-        raise ValueError(
+        raise FrameSizeError(
             f"payload size {out['payload_bytes']} != section sum {sum(sections)}")
     if b.size != out["nbytes"]:
-        raise ValueError(f"buffer is {b.size} B, frame says {out['nbytes']} B")
+        raise FrameSizeError(
+            f"buffer is {b.size} B, frame says {out['nbytes']} B")
     return out

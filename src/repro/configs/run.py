@@ -50,6 +50,20 @@ class RunConfig:
     fused_decode: bool = False
     # gradient microbatching depth inside each local step
     num_micro: int = 1
+    # -- fault model (repro.fl.faults) ------------------------------------
+    # fraction of clients scheduled each round; 1.0 = everyone (no faults)
+    participation_rate: float = 1.0
+    # probability a participating client's payload is lost mid-round
+    drop_rate: float = 0.0
+    # probability a delivered payload is a straggler (arrives 1..staleness_max
+    # rounds late); requires staleness_max >= 1
+    straggler_rate: float = 0.0
+    # staleness bound k: round-t payloads may arrive up to round t+k, held
+    # in the FLState ring buffer with weight 1/(1+delay). 0 = buffer off.
+    staleness_max: int = 0
+    # PRNG seed of the fault stream — schedules are a pure function of
+    # (fault_seed, round), independent of eval-block grouping
+    fault_seed: int = 0
     # runtime state, never serialized; required for shard_map, optional
     # for vmap (pins the fused path's replication constraint)
     mesh: Optional[Any] = field(default=None, compare=False)
@@ -64,6 +78,29 @@ class RunConfig:
                 f"wire must be 'float' or 'codec', got {self.wire!r}")
         if self.num_micro < 1:
             raise ValueError(f"num_micro must be >= 1, got {self.num_micro}")
+        if not 0.0 < self.participation_rate <= 1.0:
+            raise ValueError(
+                f"participation_rate must be in (0, 1], got "
+                f"{self.participation_rate}")
+        if not 0.0 <= self.drop_rate < 1.0:
+            raise ValueError(
+                f"drop_rate must be in [0, 1), got {self.drop_rate}")
+        if not 0.0 <= self.straggler_rate <= 1.0:
+            raise ValueError(
+                f"straggler_rate must be in [0, 1], got {self.straggler_rate}")
+        if self.staleness_max < 0:
+            raise ValueError(
+                f"staleness_max must be >= 0, got {self.staleness_max}")
+        if self.straggler_rate > 0.0 and self.staleness_max < 1:
+            raise ValueError(
+                "straggler_rate > 0 requires staleness_max >= 1 (a straggler "
+                "needs a buffer slot to land in)")
+        if self.fused_decode and self.staleness_max > 0:
+            raise ValueError(
+                "fused_decode is incompatible with staleness_max > 0: the "
+                "staleness buffer banks per-client reconstructions, which "
+                "the fused aggregate never materializes — use the default "
+                "decode path for stale rounds")
         if self.client_parallel == "shard_map":
             if self.mesh is None:
                 raise ValueError(
@@ -76,6 +113,15 @@ class RunConfig:
             make_fl_shardings(self.mesh).check_divisible(self.fl.num_clients)
 
     # -- derived -----------------------------------------------------------
+    @property
+    def has_faults(self) -> bool:
+        """True when any fault knob is non-default. The round builder keys
+        the masked pipeline on this — a zero-fault config compiles the
+        EXACT unfaulted round (the bitwise gate's trivial half; the masked
+        pipeline under a null schedule is the gated, non-trivial half)."""
+        return (self.participation_rate < 1.0 or self.drop_rate > 0.0
+                or self.straggler_rate > 0.0 or self.staleness_max > 0)
+
     def client_axes(self) -> Optional[Tuple[str, ...]]:
         """Mesh axes of the shard_map fan-out; None for the vmap fan-out."""
         if self.client_parallel != "shard_map":
@@ -96,6 +142,11 @@ class RunConfig:
             "wire_policy": self.wire_policy,
             "fused_decode": self.fused_decode,
             "num_micro": self.num_micro,
+            "participation_rate": self.participation_rate,
+            "drop_rate": self.drop_rate,
+            "straggler_rate": self.straggler_rate,
+            "staleness_max": self.staleness_max,
+            "fault_seed": self.fault_seed,
         }
 
     @classmethod
@@ -108,6 +159,11 @@ class RunConfig:
                    wire_policy=d.get("wire_policy", "fp32"),
                    fused_decode=d.get("fused_decode", False),
                    num_micro=d.get("num_micro", 1),
+                   participation_rate=d.get("participation_rate", 1.0),
+                   drop_rate=d.get("drop_rate", 0.0),
+                   straggler_rate=d.get("straggler_rate", 0.0),
+                   staleness_max=d.get("staleness_max", 0),
+                   fault_seed=d.get("fault_seed", 0),
                    mesh=mesh)
 
     @classmethod
@@ -133,4 +189,9 @@ class RunConfig:
                    client_parallel=client_parallel,
                    wire=getattr(args, "wire", "float"),
                    wire_policy=getattr(args, "wire_policy", "fp32"),
+                   participation_rate=getattr(args, "participation_rate", 1.0),
+                   drop_rate=getattr(args, "drop_rate", 0.0),
+                   straggler_rate=getattr(args, "straggler_rate", 0.0),
+                   staleness_max=getattr(args, "staleness_max", 0),
+                   fault_seed=getattr(args, "fault_seed", 0),
                    mesh=mesh)

@@ -174,6 +174,21 @@ class CompressionStrategy:
         raise NotImplementedError(
             f"strategy {self.kind!r} does not support fused aggregation")
 
+    def mask_payloads(self, payloads, w: jax.Array):
+        """Weight the batched (leading client axis N) wire payloads by the
+        (N,) f32 mask ``w`` so that ``server_aggregate`` of the masked batch
+        equals the weighted sum / N of per-client contributions.
+
+        The fault pipeline (``fl/round.py`` under ``run.has_faults``) uses
+        this with ``w ∈ {0, 1}`` to zero out dropped clients inside the
+        fused aggregate, then rescales by N/Σw. Only meaningful together
+        with ``supports_fused_aggregate``; the default refuses so a fused
+        strategy without fault support fails loudly at build time.
+        """
+        raise NotImplementedError(
+            f"strategy {self.kind!r} does not support masked fused "
+            f"aggregation (mask_payloads)")
+
     def wire_codec(self, params: PyTree, *, policy: Optional[str] = None):
         """Build this method's registered byte codec over a params template.
 
@@ -507,6 +522,14 @@ class ThreeSFCStrategy(CompressionStrategy):
             return jnp.mean(jax.lax.stop_gradient(ss) * per)
 
         return jax.grad(total_loss)(params)
+
+    def mask_payloads(self, payloads, w):
+        """(D_syn, s) is linear in s, so masking a client is exactly
+        ``s_i <- w_i * s_i`` — a dropped payload contributes a zero term to
+        the batched backward; ``w == 1`` everywhere is ``s * 1.0``, bitwise
+        the unmasked payload (the zero-fault gate's fused leg)."""
+        syns, ss = payloads
+        return syns, ss * w
 
 
 @register_strategy("fedsynth")

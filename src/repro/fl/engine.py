@@ -198,6 +198,24 @@ class RunHistory(NamedTuple):
     evals: List[Tuple[int, Any]]     # (round, eval_fn result) per eval point
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Transport give-up policy: how often a rejected uplink frame is
+    re-sent before the server treats that client as DROPPED this round
+    (the fault semantics of ``repro.fl.faults`` — the client's EF keeps
+    the whole update, the server renormalizes over what arrived)."""
+
+    max_retries: int = 2
+
+
+class DeliveryReport(NamedTuple):
+    """What ``RoundEngine.deliver`` got through the wire."""
+
+    frames: List[Any]                # validated host frames; None = given up
+    delivered: np.ndarray            # (N,) bool — the round's delivered mask
+    retries: int                     # total re-sends across all clients
+
+
 class RoundEngine:
     """Drives ``make_fl_round``-style round functions in eval-sized scans.
 
@@ -225,19 +243,62 @@ class RoundEngine:
 
     # -- state ------------------------------------------------------------
     def init_state(self, params: PyTree, num_clients: int,
-                   strategy=None) -> FLState:
+                   strategy=None, *, staleness_max: int = 0) -> FLState:
         """``fl_init`` on a deep copy of ``params`` so donation of the
         engine state can never consume the caller's model tree. Pass the
         round's ``CompressionStrategy`` so its ``init_ef_state`` shapes the
-        EF residual (zeros f32 otherwise — identical for every built-in).
+        EF residual (zeros f32 otherwise — identical for every built-in),
+        and ``staleness_max=run.staleness_max`` when the round function was
+        built with a staleness buffer (the FLState structures must match).
         With a placement contract installed, the fresh state is placed on
         the mesh (params replicated, EF client-sharded) before the first
         dispatch."""
         owned = jax.tree_util.tree_map(jnp.copy, params)
-        state = fl_init(owned, num_clients, strategy)
+        state = fl_init(owned, num_clients, strategy,
+                        staleness_max=staleness_max)
         if self.shardings is not None:
             state = self.shardings.place_state(state)
         return state
+
+    # -- transport delivery (host-side, the driver half of the fault model)
+    @staticmethod
+    def deliver(channel, frames, *,
+                policy: RetryPolicy = RetryPolicy()) -> DeliveryReport:
+        """Push per-client uplink frames through a (possibly faulty)
+        channel with retry/give-up semantics.
+
+        Each frame is sent via ``channel.send_up`` and validated with
+        ``frame.parse_header``; a ``None`` delivery (the wire dropped it)
+        or a typed ``FrameError`` (corrupt on arrival) triggers a re-send,
+        up to ``policy.max_retries`` times. A client whose every attempt
+        fails is marked undelivered — exactly the ``delivered=False``
+        branch of the in-round fault model, so the driver can hand the
+        mask to a faulted round (or just renormalize over the survivors).
+        Retries are re-sends of the SAME frame and are billed by the
+        channel like any other send (retransmission is not free).
+        """
+        from repro.comm.frame import FrameError, parse_header
+
+        out: List[Any] = []
+        delivered = np.zeros((len(frames),), bool)
+        retries = 0
+        for i, buf in enumerate(frames):
+            got = None
+            for attempt in range(policy.max_retries + 1):
+                if attempt > 0:
+                    retries += 1
+                wire = channel.send_up(buf)
+                if wire is None:
+                    continue
+                try:
+                    parse_header(wire)
+                except FrameError:
+                    continue
+                got = wire
+                break
+            out.append(got)
+            delivered[i] = got is not None
+        return DeliveryReport(out, delivered, retries)
 
     # -- the round body (shared by scan and reference loop) ----------------
     def _round(self, state: FLState) -> Tuple[FLState, RoundMetrics]:

@@ -1,0 +1,229 @@
+"""Fault model for federated rounds: who shows up, what arrives, and when.
+
+Production FL never sees the clean world the round pipeline assumes (every
+round, all N clients report back on time with intact frames). This module
+defines the repo's fault semantics as *data* — a deterministic per-round
+``FaultSchedule`` of masks that stays inside the jitted/scanned round, so
+the device-resident engine keeps its 1-dispatch/1-sync contract — and the
+EF-correctness contract every fault pattern must satisfy.
+
+Fault taxonomy (per client i, round t)
+--------------------------------------
+* **non-participation** (``participate[i] = False``): the client is not
+  scheduled this round. It does not train, its EF residual is FROZEN
+  (``e^{t+1} = e^t`` — no silent decay), its loss is excluded from the
+  round mean, and it contributes nothing to the aggregate.
+* **dropout mid-round** (``delivered[i] = False`` while participating):
+  the client trained and encoded, but its payload never reached the
+  server (crash, disconnect, corrupt frame the driver gave up on). The
+  server renormalizes over the payloads it DID receive; the client keeps
+  its whole accumulated update in the residual (``e^{t+1} = u^t = g + e^t``
+  under error feedback), so nothing is silently lost.
+* **straggler / staleness** (``delay[i] = k > 0``): the round-t payload
+  arrives at round t+k (bounded by ``staleness_max``). The client's EF
+  updates normally at t (the payload IS delivered, just late); the server
+  banks the reconstruction in the ``FLState`` staleness ring buffer and
+  folds it into the round-(t+k) aggregate with staleness weight
+  ``1 / (1 + k)`` (fresh payloads weigh exactly 1.0), renormalizing by the
+  total arrived weight.
+
+EF residual-mass conservation
+-----------------------------
+The contract, provable per round for EVERY fault pattern: with error
+feedback on, the client-side residual plus the payload the server will
+(eventually) receive equals the accumulated update::
+
+    participate=0:            e' = e,        delivered 0        (no update)
+    delivered=0 (dropped):    e' = u,        delivered 0        u = g + e
+    delay=k (straggler):      e' = u - r,    delivered r at t+k
+    healthy:                  e' = u - r,    delivered r at t
+
+Summing either side: no term of ``u`` is ever silently destroyed — faults
+move mass between the residual and the wire, never out of the system.
+``residual_mass_conserved`` checks the identity on concrete trees;
+``tests/test_faults.py`` drives it across strategies and fault patterns.
+
+Determinism contract
+--------------------
+``fault_schedule`` derives every mask from
+``fold_in(PRNGKey(fault_seed), round)`` — the same absolute-round fold_in
+convention as the engine's sampling streams — so the schedule for round t
+is a pure function of ``(fault_seed, t)``: independent of eval-block
+grouping (cadence invariance), of the fan-out, and of any other stream
+(the fault key never touches the data/compressor keys).
+
+The zero-fault schedule (participation rate 1, drop rate 0, staleness 0)
+is *bitwise* inert: every mask it produces is all-true/all-zero, every
+weight exactly 1.0, and the masked round pipeline reduces to the unfaulted
+one bit-for-bit (gated in ``benchmarks/bench_faults.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat
+
+PyTree = Any
+
+# fold offset for the fault stream: PRNGKey(fault_seed) is a stream of its
+# own (the engine folds its data/compressor streams from PRNGKey(fl.seed)),
+# so fault patterns can be re-seeded without perturbing training draws.
+FAULT_FOLD = 2
+
+
+class FaultSchedule(NamedTuple):
+    """One round's fault pattern over N clients — pure arrays, jit-resident.
+
+    ``participate``/``delivered`` are (N,) bool; ``delay`` is (N,) int32 in
+    ``[0, staleness_max]`` (0 for everyone when staleness is off); ``weight``
+    is the (N,) f32 staleness aggregation weight ``1/(1+delay)`` — exactly
+    1.0 wherever ``delay == 0``, so a zero-fault schedule multiplies
+    nothing by anything but 1.0.
+    """
+
+    participate: jax.Array
+    delivered: jax.Array
+    delay: jax.Array
+    weight: jax.Array
+
+    @property
+    def arrives_now(self) -> jax.Array:
+        """(N,) bool: payload delivered this round with zero delay."""
+        return self.participate & self.delivered & (self.delay == 0)
+
+    @property
+    def arrives_late(self) -> jax.Array:
+        """(N,) bool: payload delivered, but banked for a future round."""
+        return self.participate & self.delivered & (self.delay > 0)
+
+
+def staleness_weight(delay: jax.Array) -> jax.Array:
+    """Aggregation weight of a payload ``delay`` rounds late: 1/(1+delay).
+
+    Exactly 1.0 at delay 0 (the IEEE-exact identity the zero-fault bitwise
+    gate relies on); monotonically discounts staler payloads, the standard
+    polynomial staleness function of async FL.
+    """
+    return 1.0 / (1.0 + delay.astype(jnp.float32))
+
+
+def fault_schedule(fault_key: jax.Array, round_idx: jax.Array,
+                   num_clients: int, *, participation_rate: float = 1.0,
+                   drop_rate: float = 0.0, straggler_rate: float = 0.0,
+                   staleness_max: int = 0) -> FaultSchedule:
+    """The round's ``FaultSchedule``, a pure function of (key, round).
+
+    All draws come from ``fold_in(fault_key, round_idx)`` split four ways
+    (participation, dropout, straggling, delay), so the pattern depends on
+    the absolute round counter only — same seed ⇒ same schedule regardless
+    of how rounds are grouped into scan blocks.
+
+    Rate edge cases are exact, not approximate: ``uniform() < 1.0`` is
+    always true (uniform draws live in [0, 1)) and ``uniform() < 0.0``
+    never, so rate-1 participation and rate-0 dropout/straggling produce
+    all-true/all-false masks bitwise, with no special-casing.
+    """
+    k = jax.random.fold_in(fault_key, round_idx)
+    kp, kd, ks, kl = jax.random.split(k, 4)
+    n = (num_clients,)
+    participate = jax.random.uniform(kp, n) < participation_rate
+    delivered = ~(jax.random.uniform(kd, n) < drop_rate)
+    if staleness_max > 0:
+        straggle = jax.random.uniform(ks, n) < straggler_rate
+        delay = jnp.where(
+            straggle,
+            jax.random.randint(kl, n, 1, staleness_max + 1), 0
+        ).astype(jnp.int32)
+    else:
+        delay = jnp.zeros(n, jnp.int32)
+    return FaultSchedule(participate, delivered, delay,
+                         staleness_weight(delay))
+
+
+def null_schedule(num_clients: int) -> FaultSchedule:
+    """The all-healthy schedule: everyone participates, everything arrives
+    on time with weight exactly 1.0."""
+    n = (num_clients,)
+    return FaultSchedule(jnp.ones(n, bool), jnp.ones(n, bool),
+                         jnp.zeros(n, jnp.int32), jnp.ones(n, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# staleness ring buffer (server-side FLState extension)
+# ---------------------------------------------------------------------------
+
+
+def init_stale_buffer(params: PyTree, staleness_max: int):
+    """Zeroed ring buffer for payloads in flight: per params leaf a
+    ``(S, *shape)`` f32 bank (slot j holds the weighted sum of
+    reconstructions maturing at rounds ≡ j mod S) plus the matching (S,)
+    arrived-weight accumulator. Returns ``(None, None)`` when staleness is
+    off so the zero-fault ``FLState`` keeps its exact seed structure."""
+    if staleness_max <= 0:
+        return None, None
+    buf = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((staleness_max, *p.shape), jnp.float32), params)
+    return buf, jnp.zeros((staleness_max,), jnp.float32)
+
+
+def consume_and_bank(buf: PyTree, buf_w: jax.Array, round_idx: jax.Array,
+                     delay: jax.Array, w_late: jax.Array, recons: PyTree):
+    """One round of ring-buffer turnover.
+
+    ``w_late`` is the (N,) banking weight of each client's payload —
+    nonzero only for payloads arriving late (staleness weight, optionally
+    times a caller aggregation weight). Returns ``(mature, mature_w,
+    new_buf, new_buf_w)``: the weighted-sum tree + weight maturing THIS
+    round (slot ``t mod S``), and the buffer with that slot recycled and
+    every late payload banked at slot ``(t + delay) mod S``.
+    Consume-then-bank ordering makes ``delay == S`` land in the just-freed
+    slot (arrives at exactly t+S, the bound). On-time payloads carry
+    ``w_late == 0`` into the consumed slot — an exact no-op — so the
+    scatter needs no gating.
+    """
+    S = buf_w.shape[0]
+    slot = jnp.mod(round_idx, S)
+    mature = jax.tree_util.tree_map(lambda b: b[slot], buf)
+    mature_w = buf_w[slot]
+    target = jnp.mod(round_idx + delay, S)                         # (N,)
+
+    def bank(b, r):
+        wb = w_late.reshape((-1,) + (1,) * (r.ndim - 1))
+        return b.at[slot].set(0.0).at[target].add(
+            wb * r.astype(jnp.float32))
+
+    new_buf = jax.tree_util.tree_map(bank, buf, recons)
+    new_buf_w = buf_w.at[slot].set(0.0).at[target].add(w_late)
+    return mature, mature_w, new_buf, new_buf_w
+
+
+def pending_mass(buf_w: Optional[jax.Array]) -> jax.Array:
+    """Total staleness weight still in flight (0 when staleness is off) —
+    the bench's observability hook for 'how much update is in the air'."""
+    if buf_w is None:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sum(buf_w)
+
+
+# ---------------------------------------------------------------------------
+# the EF-correctness oracle (host-side, test/bench surface)
+# ---------------------------------------------------------------------------
+
+
+def residual_mass_conserved(u: PyTree, e_new: PyTree, delivered_payload: PyTree,
+                            *, atol: float = 0.0) -> bool:
+    """Check the per-round conservation identity  e' + delivered == u.
+
+    ``delivered_payload`` is the reconstruction the server will (eventually)
+    receive from this client — the zero tree for a dropped payload. Exact
+    by construction for the frozen/dropped branches (pure ``where``
+    selects); the healthy/straggler branch is ``u - r + r``, conserving up
+    to one f32 rounding of the subtraction — pass a small ``atol`` there.
+    """
+    diff = flat.tree_sub(u, flat.tree_add(e_new, delivered_payload))
+    worst = max((float(jnp.max(jnp.abs(l))) if l.size else 0.0
+                 for l in jax.tree_util.tree_leaves(diff)), default=0.0)
+    return worst <= atol

@@ -70,6 +70,7 @@ from repro.configs.base import FLConfig
 from repro.configs.run import RunConfig
 from repro.core import flat
 from repro.core.strategy import CompressionStrategy, warn_deprecated_once
+from repro.fl import faults as faults_lib
 from repro.fl.client import local_train
 from repro.fl.server import aggregate, server_update
 
@@ -85,21 +86,32 @@ class FLState(NamedTuple):
     params: PyTree          # global model w^t
     ef: PyTree              # per-client EF residuals, leading axis N
     round: jax.Array
+    # staleness ring buffer (repro.fl.faults): per params leaf a (S, *shape)
+    # bank of weighted in-flight reconstructions + the (S,) arrived-weight
+    # accumulator. None (an empty pytree node) whenever staleness_max == 0,
+    # so zero-fault states keep the exact seed structure.
+    buf: PyTree = None
+    buf_w: Optional[jax.Array] = None
 
 
 class RoundMetrics(NamedTuple):
-    loss: jax.Array         # mean local training loss
+    loss: jax.Array         # mean local training loss (participants only)
     cosine: jax.Array       # per-client compression efficiency (N,)
     payload_floats: jax.Array
     update_norm: jax.Array
     # measured per-client uplink bytes (wire='codec'); 0 in float mode
     wire_bytes_up: jax.Array = 0.0
+    # total aggregation weight that arrived this round: N when healthy,
+    # the renormalization denominator under faults (fresh + matured stale)
+    arrivals: jax.Array = -1.0
 
 
 def fl_init(params: PyTree, num_clients: int,
-            strategy: Optional[CompressionStrategy] = None) -> FLState:
+            strategy: Optional[CompressionStrategy] = None, *,
+            staleness_max: int = 0) -> FLState:
     """Fresh round state; the EF residual comes from the strategy when one
-    is given (zeros f32 mirroring params otherwise — the same default)."""
+    is given (zeros f32 mirroring params otherwise — the same default).
+    ``staleness_max > 0`` attaches the zeroed staleness ring buffer."""
     if strategy is not None:
         ef1 = strategy.init_ef_state(params)
     else:
@@ -107,7 +119,8 @@ def fl_init(params: PyTree, num_clients: int,
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
     ef = jax.tree_util.tree_map(
         lambda e: jnp.broadcast_to(e, (num_clients, *e.shape)), ef1)
-    return FLState(params, ef, jnp.zeros((), jnp.int32))
+    buf, buf_w = faults_lib.init_stale_buffer(params, staleness_max)
+    return FLState(params, ef, jnp.zeros((), jnp.int32), buf, buf_w)
 
 
 def _check_codec(run: RunConfig, strategy: CompressionStrategy,
@@ -130,6 +143,7 @@ def build_fl_round(
     run: RunConfig,
     *,
     codec=None,
+    fault_schedule_fn=None,
 ) -> Callable[[FLState, PyTree, jax.Array], Tuple[FLState, RoundMetrics]]:
     """THE round builder: one pipeline over (strategy × fan-out × wire).
 
@@ -143,16 +157,37 @@ def build_fl_round(
     so the all_gather carries ONLY the tiny (D_syn, s) payloads and ONE
     replicated batched backward replaces the O(d) full-gradient collective.
     EF stays exact because each client updates its residual locally.
+
+    ``run.has_faults`` switches in the masked fault pipeline
+    (``repro.fl.faults``); ``fault_schedule_fn(round_idx, num_clients) ->
+    FaultSchedule`` overrides the config-derived schedule and forces the
+    masked pipeline even on a zero-fault config — the injection seam the
+    fault harness uses to (a) prove the masked pipeline under a null
+    schedule is bitwise the unfaulted round and (b) drive hand-written
+    fault patterns in the EF-invariance tests. Injected schedules must
+    respect ``run.staleness_max`` (delays > 0 need the ring buffer).
     """
     cfg: FLConfig = run.fl
     mesh: Optional[Mesh] = run.mesh
     axes = run.client_axes()
     fused = run.fused_decode
+    faulted = run.has_faults or fault_schedule_fn is not None
+    N = cfg.num_clients
+    S = run.staleness_max
     if fused and not strategy.supports_fused_aggregate:
         raise ValueError(
             f"fused_decode requires a strategy with "
             f"supports_fused_aggregate; {strategy.cfg.kind!r} has none")
+    if faulted and fused:
+        if type(strategy).mask_payloads is CompressionStrategy.mask_payloads:
+            raise ValueError(
+                f"fused_decode under faults requires strategy "
+                f"{strategy.cfg.kind!r} to implement mask_payloads "
+                f"(weighting the batched wire payloads)")
     _check_codec(run, strategy, codec)
+    # the fault stream is its own root key — fault patterns re-seed without
+    # perturbing the data/compressor draws (fl.faults determinism contract)
+    fault_key = jax.random.PRNGKey(run.fault_seed) if faulted else None
 
     # ---- client phase: local train + strategy encode ----------------------
     if run.wire == "codec":
@@ -166,28 +201,58 @@ def build_fl_round(
         def encode(key_i, g, ef_i, params, cid, rnd):
             return strategy.step(key_i, g, ef_i, params)
 
-    def client_step(global_params, ef_i, batches_i, key_i, cid, rnd):
+    def client_core(global_params, ef_i, batches_i, key_i, cid, rnd):
         g, loss = local_train(loss_fn, global_params, batches_i,
                               cfg.local_lr, num_micro=run.num_micro)
         msg, ef_new, metrics = encode(key_i, g, ef_i, global_params,
                                       cid, rnd)
-        return msg, ef_new, loss, metrics
+        return g, msg, ef_new, loss, metrics
 
-    in_axes = (None, 0, 0, 0, 0, None)
+    if not faulted:
+        def client_step(global_params, ef_i, batches_i, key_i, cid, rnd):
+            _, msg, ef_new, loss, metrics = client_core(
+                global_params, ef_i, batches_i, key_i, cid, rnd)
+            return msg, ef_new, loss, metrics
+
+        in_axes = (None, 0, 0, 0, 0, None)
+    else:
+        def client_step(global_params, ef_i, batches_i, key_i, cid, rnd,
+                        part_i, deliv_i):
+            g, msg, ef_new, loss, metrics = client_core(
+                global_params, ef_i, batches_i, key_i, cid, rnd)
+            # EF fault algebra (repro.fl.faults): a skipped client's
+            # residual FREEZES; a dropped payload banks the whole
+            # accumulated update u = g + e in the residual (nothing lost)
+            # — with EF off there is no residual, the update is lost and
+            # e stays whatever the strategy keeps it as. Pure per-client
+            # `where` selects: no new collectives, bitwise inert when
+            # part_i and deliv_i are both true.
+            if strategy.cfg.error_feedback:
+                ef_drop = strategy._accumulate(g, ef_i)
+            else:
+                ef_drop = ef_i
+            ef_out = jax.tree_util.tree_map(
+                lambda new, drop, old: jnp.where(
+                    part_i, jnp.where(deliv_i, new, drop), old),
+                ef_new, ef_drop, ef_i)
+            return msg, ef_out, loss, metrics
+
+        in_axes = (None, 0, 0, 0, 0, None, 0, 0)
+    n_extra = 2 if faulted else 0
 
     # ---- transport boundary: the client fan-out ---------------------------
     if axes is None:
-        def fanout(params, ef, batches, keys, cids, rnd):
-            return jax.vmap(client_step, in_axes=in_axes)(
-                params, ef, batches, keys, cids, rnd)
+        def fanout(*args):
+            return jax.vmap(client_step, in_axes=in_axes)(*args)
     else:
-        def body(global_params, ef, batches, keys_, cids, rnd):
+        def body(*args):
             with jax.named_scope(CLIENT_SCOPE):
-                outs = jax.vmap(client_step, in_axes=in_axes)(
-                    global_params, ef, batches, keys_, cids, rnd)
+                outs = jax.vmap(client_step, in_axes=in_axes)(*args)
             # ONE tiled all_gather of every output EXCEPT the
             # client-resident EF tree — the gathered operands are the wire
-            # (recon trees, wire payloads or framed uint8 buffers).
+            # (recon trees, wire payloads or framed uint8 buffers). The
+            # fault masks ride IN as client-sharded scalars (per-client
+            # where-selects in the scope above), never adding a collective.
             gather = lambda x: jax.lax.all_gather(x, axes, tiled=True)
             return tuple(
                 o if i == 1 else jax.tree_util.tree_map(gather, o)
@@ -195,7 +260,8 @@ def build_fl_round(
 
         fanout = shard_map(
             body, mesh=mesh,
-            in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P()),
+            in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P())
+            + (P(axes),) * n_extra,
             out_specs=tuple(P(axes) if i == 1 else P() for i in range(4)),
             check_rep=False,
         )
@@ -212,36 +278,122 @@ def build_fl_round(
     # ---- server phase: decode + aggregate + update + metrics --------------
     wire_bytes = codec.nbytes if run.wire == "codec" else 0.0
 
-    def finish(state: FLState, agg, ef_new, losses, metrics,
-               payload_floats) -> Tuple[FLState, RoundMetrics]:
+    def finish(state: FLState, agg, ef_new, loss, metrics, payload_floats,
+               arrivals, buf, buf_w) -> Tuple[FLState, RoundMetrics]:
         new_params = server_update(state.params, agg, cfg.server_lr)
         ef_new = jax.tree_util.tree_map(
             lambda n, o: n.astype(o.dtype), ef_new, state.ef)
         rm = RoundMetrics(
-            loss=jnp.mean(losses),
+            loss=loss,
             cosine=metrics.cosine,
             payload_floats=payload_floats,
             update_norm=flat.tree_norm(agg),
             wire_bytes_up=jnp.float32(wire_bytes),
+            arrivals=arrivals,
         )
-        return FLState(new_params, ef_new, state.round + 1), rm
+        return FLState(new_params, ef_new, state.round + 1, buf, buf_w), rm
+
+    def _mask_bcast(m, x):
+        return m.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    def _faulted_aggregate(state: FLState, recons, sched, weights):
+        """Masked/weighted aggregation + staleness-buffer turnover.
+
+        Returns ``(agg, arrivals, buf, buf_w)``. The unweighted no-staleness
+        branch is ``mean(where(mask, x, 0)) * (N/count)`` — count-correct
+        renormalization that multiplies by *exactly* 1.0 under an
+        all-healthy schedule, keeping the zero-fault round bitwise equal to
+        the unfaulted pipeline (gated in benchmarks/bench_faults.py).
+        """
+        now = sched.arrives_now
+        if S == 0 and weights is None:
+            cnt = jnp.sum(now.astype(jnp.float32))
+            ratio = jnp.where(cnt > 0, N / cnt, 0.0)
+            agg = jax.tree_util.tree_map(
+                lambda x: jnp.mean(jnp.where(_mask_bcast(now, x), x, 0),
+                                   axis=0) * ratio,
+                recons)
+            return agg, cnt, state.buf, state.buf_w
+        # generic path: staleness-weighted sum of fresh + matured payloads,
+        # renormalized by the total arrived weight
+        base_w = jnp.ones((N,), jnp.float32) if weights is None else weights
+        w_now = jnp.where(now, sched.weight * base_w, 0.0)
+        if S == 0:
+            mature_w = jnp.float32(0.0)
+            num = jax.tree_util.tree_map(
+                lambda x: jnp.sum(_mask_bcast(w_now, x) * x, axis=0), recons)
+            buf, buf_w = state.buf, state.buf_w
+        else:
+            if state.buf_w is None:
+                raise ValueError(
+                    "staleness_max > 0 requires an FLState carrying the "
+                    "staleness buffer — init with fl_init(..., "
+                    "staleness_max=run.staleness_max)")
+            w_late = jnp.where(sched.arrives_late, sched.weight * base_w, 0.0)
+            mature, mature_w, buf, buf_w = faults_lib.consume_and_bank(
+                state.buf, state.buf_w, state.round, sched.delay, w_late,
+                recons)
+            num = jax.tree_util.tree_map(
+                lambda x, m: jnp.sum(_mask_bcast(w_now, x) * x, axis=0) + m,
+                recons, mature)
+        den = jnp.sum(w_now) + mature_w
+        inv = jnp.where(den > 0, 1.0 / den, 0.0)
+        agg = jax.tree_util.tree_map(lambda x: x * inv, num)
+        return agg, den, buf, buf_w
 
     def fl_round(state: FLState, client_batches: PyTree, key: jax.Array,
                  weights: jax.Array = None):
         keys = jax.random.split(key, cfg.num_clients)
         cids = jnp.arange(cfg.num_clients, dtype=jnp.uint32)
+        if faulted:
+            if fault_schedule_fn is not None:
+                sched = fault_schedule_fn(state.round, N)
+            else:
+                sched = faults_lib.fault_schedule(
+                    fault_key, state.round, N,
+                    participation_rate=run.participation_rate,
+                    drop_rate=run.drop_rate,
+                    straggler_rate=run.straggler_rate,
+                    staleness_max=S)
+            extra = (sched.participate, sched.delivered)
+        else:
+            sched = None
+            extra = ()
         msgs, ef_new, losses, metrics = fanout(
-            state.params, state.ef, client_batches, keys, cids, state.round)
+            state.params, state.ef, client_batches, keys, cids, state.round,
+            *extra)
+        if faulted:
+            # loss over participants only (mean × N/count: exact 1.0 when
+            # everyone participates, same identity as the aggregate)
+            cnt_p = jnp.sum(sched.participate.astype(jnp.float32))
+            loss = jnp.mean(jnp.where(sched.participate, losses, 0.0)) * \
+                jnp.where(cnt_p > 0, N / cnt_p, 0.0)
+        else:
+            loss = jnp.mean(losses)
         if fused:
             if axes is None:
                 # vmap fan-out: the payloads are tiny -> pin replicated
                 msgs = jax.tree_util.tree_map(_replicate, msgs)
             payloads = jax.vmap(codec.decode)(msgs) \
                 if run.wire == "codec" else msgs
-            agg = strategy.server_aggregate(state.params, payloads)
             # scalar, matching the default path's jnp.mean reduction
             pf = jnp.float32(strategy.payload_floats(state.params))
-            return finish(state, agg, ef_new, losses, metrics, pf)
+            if faulted:
+                # fused faults: zero out undelivered payloads inside the
+                # batched aggregate (S == 0 here by RunConfig validation),
+                # then renormalize the mean over N to a mean over arrivals
+                w = jnp.where(sched.arrives_now, jnp.float32(1.0),
+                              jnp.float32(0.0))
+                agg = strategy.server_aggregate(
+                    state.params, strategy.mask_payloads(payloads, w))
+                cnt = jnp.sum(w)
+                agg = flat.tree_scale(
+                    agg, jnp.where(cnt > 0, N / cnt, 0.0))
+                return finish(state, agg, ef_new, loss, metrics, pf, cnt,
+                              state.buf, state.buf_w)
+            agg = strategy.server_aggregate(state.params, payloads)
+            return finish(state, agg, ef_new, loss, metrics, pf,
+                          jnp.float32(N), state.buf, state.buf_w)
         if run.wire == "codec":
             # (N, nbytes) uint8 -> per-client reconstruction trees
             canon = jax.vmap(codec.decode)(msgs)
@@ -249,11 +401,18 @@ def build_fl_round(
                 lambda c: codec.recon_tree(c, state.params))(canon)
         else:
             recons = msgs
+        if faulted:
+            agg, arrivals, buf, buf_w = _faulted_aggregate(
+                state, recons, sched, weights)
+            return finish(state, agg, ef_new, loss, metrics,
+                          jnp.mean(metrics.payload_floats), arrivals,
+                          buf, buf_w)
         # inputs are full (N, ...) arrays in client order on both fan-out
         # paths, so the reduction order — hence the result — is identical
         agg = aggregate(recons, weights)
-        return finish(state, agg, ef_new, losses, metrics,
-                      jnp.mean(metrics.payload_floats))
+        return finish(state, agg, ef_new, loss, metrics,
+                      jnp.mean(metrics.payload_floats),
+                      jnp.float32(N), state.buf, state.buf_w)
 
     return fl_round
 

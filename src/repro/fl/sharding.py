@@ -62,12 +62,19 @@ class FLShardings:
     # ---- placement -------------------------------------------------------
     def place_state(self, state: FLState) -> FLState:
         """Explicitly place an FLState: params/round replicated, EF sharded
-        on the client axis. Requires ``N % client_shards == 0``."""
+        on the client axis. Requires ``N % client_shards == 0``. The
+        staleness ring buffer (when present) is replicated like the params
+        it mirrors — it is server state, consumed by the replicated
+        aggregate, and its leading axis is the S slots, not clients."""
         self.check_divisible(jax.tree_util.tree_leaves(state.ef)[0].shape[0])
         return FLState(
             params=jax.device_put(state.params, self.replicated),
             ef=jax.device_put(state.ef, self.client),
             round=jax.device_put(state.round, self.replicated),
+            buf=(None if state.buf is None
+                 else jax.device_put(state.buf, self.replicated)),
+            buf_w=(None if state.buf_w is None
+                   else jax.device_put(state.buf_w, self.replicated)),
         )
 
     def place_client_tree(self, tree: PyTree) -> PyTree:
@@ -105,5 +112,6 @@ def make_fl_shardings(mesh: Mesh) -> FLShardings:
         axes=axes,
         replicated=replicated,
         client=client,
-        state=FLState(params=replicated, ef=client, round=replicated),
+        state=FLState(params=replicated, ef=client, round=replicated,
+                      buf=replicated, buf_w=replicated),
     )

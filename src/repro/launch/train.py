@@ -114,7 +114,8 @@ def train_vision(args):
         build_fl_round(model.loss, strategy, run, codec=codec),
         vision_batcher(train.x, train.y, pools, args.local_steps, args.batch),
         seed=args.seed, shardings=shardings)
-    state = engine.init_state(params, args.clients, strategy)
+    state = engine.init_state(params, args.clients, strategy,
+                              staleness_max=run.staleness_max)
 
     @jax.jit
     def eval_acc(p):
@@ -172,7 +173,8 @@ def train_lm_smoke(args):
         token_batcher(data, args.clients, args.local_steps, args.batch,
                       extras=extras),
         seed=args.seed, shardings=shardings)
-    state = engine.init_state(params, args.clients, strategy)
+    state = engine.init_state(params, args.clients, strategy,
+                              staleness_max=run.staleness_max)
     engine.run(state, args.rounds, eval_every=args.eval_every,
                eval_fn=lambda st, m, r: print(json.dumps(
                    {"round": r, "loss": float(m.loss[-1]),
@@ -206,6 +208,26 @@ def main(argv=None):
                     help="what crosses the client/server boundary: float "
                          "trees (accounted bytes) or the repro.comm codec's "
                          "framed uint8 buffers (measured bytes)")
+    # fault model (repro.fl.faults): all default to the zero-fault config,
+    # which compiles the exact unfaulted round
+    ap.add_argument("--participation-rate", type=float, default=1.0,
+                    dest="participation_rate",
+                    help="fraction of clients scheduled each round")
+    ap.add_argument("--drop-rate", type=float, default=0.0, dest="drop_rate",
+                    help="probability a participating client's payload is "
+                         "lost mid-round (EF banks the whole update)")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    dest="straggler_rate",
+                    help="probability a delivered payload arrives 1..k "
+                         "rounds late (requires --staleness-max >= 1)")
+    ap.add_argument("--staleness-max", type=int, default=0,
+                    dest="staleness_max",
+                    help="staleness bound k: late payloads are applied at "
+                         "t+delay with weight 1/(1+delay); 0 disables the "
+                         "ring buffer")
+    ap.add_argument("--fault-seed", type=int, default=0, dest="fault_seed",
+                    help="seed of the fault stream (schedules are a pure "
+                         "function of (fault_seed, round))")
     ap.add_argument("--out", default="experiments/train_run")
     args = ap.parse_args(argv)
     if args.arch and args.smoke:

@@ -1,0 +1,497 @@
+"""Fault-tolerant rounds: schedule determinism, EF correctness under every
+fault pattern, the zero-fault bitwise contract, staleness, and transport
+hardening.
+
+The vmap half of the (method × fused × wire) zero-fault bitwise matrix runs
+here (the shard_map half needs 8 devices — see the ``faults`` scenario in
+tests/test_shard_round.py). The masked fault pipeline is forced onto a
+zero-fault config through ``build_fl_round``'s ``fault_schedule_fn``
+injection seam, so what is gated is the NON-trivial identity: masked
+pipeline + null schedule ≡ unfaulted pipeline, bit for bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.comm import FaultyChannel, InProcessChannel, make_codec
+from repro.comm.frame import (BadMagicError, FrameError, FrameSpec,
+                              TruncatedFrameError, encode_header,
+                              parse_header)
+from repro.configs.base import CompressorConfig, FLConfig
+from repro.configs.run import RunConfig
+from repro.core import flat
+from repro.core.strategy import STRATEGIES, make_strategy
+from repro.fl import faults as F
+from repro.fl.client import local_train
+from repro.fl.engine import RetryPolicy, RoundEngine, device_pools, \
+    vision_batcher
+from repro.fl.round import build_fl_round, fl_init
+from repro.models.build import vision_syn_spec
+from repro.models.cnn import VisionSpec, make_paper_model
+
+N, K, B = 4, 1, 8
+SPEC = VisionSpec("tiny", (4, 4, 1), 3)
+
+
+@pytest.fixture(scope="module")
+def world():
+    model = make_paper_model("mlp", SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (N, K, B, 4, 4, 1)),
+        "y": jax.random.randint(jax.random.PRNGKey(2), (N, K, B), 0, 3),
+    }
+    return model, params, batches
+
+
+def _strategy(model, ccfg):
+    spec = vision_syn_spec(SPEC, ccfg)
+    return make_strategy(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                         local_lr=0.05), spec
+
+
+def _ccfg(kind):
+    return CompressorConfig(kind=kind, keep_ratio=0.2, syn_steps=2,
+                            syn_lr=0.1,
+                            error_feedback=kind != "identity")
+
+
+def _tree_eq(a, b, what=""):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{what} not bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# schedule determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_schedule_deterministic_and_exact_at_rate_edges():
+    key = jax.random.PRNGKey(42)
+    a = F.fault_schedule(key, jnp.int32(7), 16, participation_rate=0.5,
+                         drop_rate=0.3, straggler_rate=0.4, staleness_max=3)
+    b = F.fault_schedule(key, jnp.int32(7), 16, participation_rate=0.5,
+                         drop_rate=0.3, straggler_rate=0.4, staleness_max=3)
+    _tree_eq(a, b, "same (seed, round) schedule")
+    c = F.fault_schedule(key, jnp.int32(8), 16, participation_rate=0.5,
+                         drop_rate=0.3, straggler_rate=0.4, staleness_max=3)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, c)), "round must vary the pattern"
+    # delays bounded, weights exact
+    assert int(jnp.max(a.delay)) <= 3 and int(jnp.min(a.delay)) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(a.weight),
+        np.float32(1.0) / (np.float32(1.0)
+                           + np.asarray(a.delay).astype(np.float32)))
+    # rate edges are exact masks, not approximate ones
+    e = F.fault_schedule(key, jnp.int32(3), 64)
+    assert bool(jnp.all(e.participate)) and bool(jnp.all(e.delivered))
+    assert bool(jnp.all(e.delay == 0)) and bool(jnp.all(e.weight == 1.0))
+    z = F.fault_schedule(key, jnp.int32(3), 64, participation_rate=1.0,
+                         drop_rate=0.0, straggler_rate=0.0, staleness_max=2)
+    assert bool(jnp.all(z.arrives_now)) and not bool(jnp.any(z.arrives_late))
+    n = F.null_schedule(5)
+    assert bool(jnp.all(n.arrives_now)) and bool(jnp.all(n.weight == 1.0))
+
+
+def test_fault_schedule_rates_are_roughly_honored():
+    key = jax.random.PRNGKey(0)
+    hits = np.mean([np.asarray(F.fault_schedule(
+        key, jnp.int32(r), 64, participation_rate=0.5).participate).mean()
+        for r in range(32)])
+    assert 0.4 < hits < 0.6, hits
+
+
+# ---------------------------------------------------------------------------
+# zero-fault bitwise: masked pipeline + null schedule == unfaulted pipeline
+# (vmap half of the matrix; shard_map half in test_shard_round.py 'faults')
+# ---------------------------------------------------------------------------
+
+ALL_KINDS = ("identity", "topk", "randk", "signsgd", "stc", "threesfc",
+             "fedsynth")
+CODEC_KINDS = ("identity", "topk", "signsgd", "stc", "threesfc")
+
+VMAP_COMBOS = (
+    [(k, "float", False) for k in ALL_KINDS]
+    + [(k, "codec", False) for k in CODEC_KINDS]
+    + [("threesfc", "float", True), ("threesfc", "codec", True)]
+)
+
+
+@pytest.mark.parametrize("kind,wire,fused", VMAP_COMBOS,
+                         ids=[f"{k}-{w}{'-fused' if f else ''}"
+                              for k, w, f in VMAP_COMBOS])
+def test_zero_fault_schedule_bitwise_vmap(world, kind, wire, fused):
+    model, params, batches = world
+    ccfg = _ccfg(kind)
+    strat, spec = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+    run = RunConfig(fl=cfg, wire=wire, fused_decode=fused)
+    codec = make_codec(ccfg, params, syn_spec=spec,
+                       syn_loss_fn=model.syn_loss) if wire == "codec" else None
+    rf = jax.jit(build_fl_round(model.loss, strat, run, codec=codec))
+    rf_null = jax.jit(build_fl_round(
+        model.loss, strat, run, codec=codec,
+        fault_schedule_fn=lambda r, n: F.null_schedule(n)))
+    sa, sb = fl_init(params, N, strat), fl_init(params, N, strat)
+    key = jax.random.PRNGKey(5)
+    for r in range(2):
+        kr = jax.random.fold_in(key, r)
+        sa, ma = rf(sa, batches, kr)
+        sb, mb = rf_null(sb, batches, kr)
+    _tree_eq(sa.params, sb.params, f"{kind}/{wire} params")
+    _tree_eq(sa.ef, sb.ef, f"{kind}/{wire} ef")
+    for f in ("loss", "cosine", "payload_floats", "update_norm"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ma, f)), np.asarray(getattr(mb, f)),
+            err_msg=f"{kind}/{wire} metric {f}")
+    assert float(mb.arrivals) == float(N)
+
+
+# ---------------------------------------------------------------------------
+# EF correctness under faults
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_ef_freezes_for_skipped_client_every_strategy(world, kind):
+    """A client skipped for k rounds keeps its residual bit-for-bit — the
+    same residual as one that was never scheduled (no silent decay)."""
+    model, params, batches = world
+    ccfg = _ccfg(kind)
+    strat, _ = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+
+    def sched(r, n):
+        # round 0: everyone (builds a nonzero residual); rounds 1..: client
+        # 0 is never scheduled
+        part = (r < 1) | (jnp.arange(n) != 0)
+        return F.FaultSchedule(part, jnp.ones((n,), bool),
+                               jnp.zeros((n,), jnp.int32),
+                               jnp.ones((n,), jnp.float32))
+
+    rf = jax.jit(build_fl_round(model.loss, strat, RunConfig(fl=cfg),
+                                fault_schedule_fn=sched))
+    st = fl_init(params, N, strat)
+    key = jax.random.PRNGKey(9)
+    st, _ = rf(st, batches, jax.random.fold_in(key, 0))
+    ef_after_r0 = jax.tree_util.tree_map(lambda e: e[0], st.ef)
+    if kind != "identity" and strat.cfg.error_feedback:
+        assert any(float(jnp.max(jnp.abs(l))) > 0 for l in
+                   jax.tree_util.tree_leaves(ef_after_r0)), \
+            "round 0 should leave a nonzero residual to freeze"
+    for r in (1, 2):
+        st, m = rf(st, batches, jax.random.fold_in(key, r))
+        assert float(m.arrivals) == float(N - 1)
+    _tree_eq(jax.tree_util.tree_map(lambda e: e[0], st.ef), ef_after_r0,
+             f"{kind} frozen residual")
+
+
+def test_dropped_payload_conserves_residual_mass(world):
+    """delivered=0 with EF on: e' = u = g + e, delivered mass 0 — nothing
+    silently lost; a healthy client keeps e' + recon == u."""
+    model, params, batches = world
+    ccfg = _ccfg("topk")
+    strat, _ = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+
+    def sched(r, n):
+        return F.FaultSchedule(jnp.ones((n,), bool), jnp.arange(n) != 0,
+                               jnp.zeros((n,), jnp.int32),
+                               jnp.ones((n,), jnp.float32))
+
+    rf = jax.jit(build_fl_round(model.loss, strat, RunConfig(fl=cfg),
+                                fault_schedule_fn=sched))
+    key = jax.random.PRNGKey(11)
+    st, m = rf(fl_init(params, N, strat), batches, key)
+    assert float(m.arrivals) == float(N - 1)
+
+    keys = jax.random.split(key, N)       # the round's per-client keys
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for i, atol in ((0, 0.0), (1, 1e-6)):
+        bi = jax.tree_util.tree_map(lambda x: x[i], batches)
+        g, _ = local_train(model.loss, params, bi, 0.05)
+        u = g                              # initial residual is zero
+        recon, _, _ = strat.step(keys[i], g, zeros, params)
+        e_new = jax.tree_util.tree_map(lambda e: e[i], st.ef)
+        delivered = zeros if i == 0 else recon
+        assert F.residual_mass_conserved(u, e_new, delivered, atol=atol), \
+            f"client {i}: residual mass not conserved"
+
+
+def test_full_dropout_round_is_a_no_op_on_params(world):
+    model, params, batches = world
+    ccfg = _ccfg("topk")
+    strat, _ = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+
+    def sched(r, n):
+        return F.FaultSchedule(jnp.ones((n,), bool), jnp.zeros((n,), bool),
+                               jnp.zeros((n,), jnp.int32),
+                               jnp.ones((n,), jnp.float32))
+
+    rf = jax.jit(build_fl_round(model.loss, strat, RunConfig(fl=cfg),
+                                fault_schedule_fn=sched))
+    st, m = rf(fl_init(params, N, strat), batches, jax.random.PRNGKey(1))
+    _tree_eq(st.params, params, "full-dropout params")
+    assert float(m.arrivals) == 0.0 and float(m.update_norm) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# staleness
+# ---------------------------------------------------------------------------
+
+
+def test_consume_and_bank_unit():
+    params = {"w": jnp.zeros((3,))}
+    buf, buf_w = F.init_stale_buffer(params, 2)
+    recons = {"w": jnp.stack([jnp.full((3,), 2.0), jnp.full((3,), 4.0)])}
+    delay = jnp.asarray([2, 0], jnp.int32)
+    w_late = jnp.asarray([0.5, 0.0], jnp.float32)   # only client 0 banks
+    # round 0: nothing mature yet; client 0's payload lands at slot 0
+    # (consume-then-bank: delay == S reuses the just-freed slot)
+    m, mw, buf, buf_w = F.consume_and_bank(buf, buf_w, jnp.int32(0), delay,
+                                           w_late, recons)
+    assert float(mw) == 0.0 and float(jnp.max(jnp.abs(m["w"]))) == 0.0
+    assert float(F.pending_mass(buf_w)) == 0.5
+    # round 1: slot 1 matures empty
+    m, mw, buf, buf_w = F.consume_and_bank(
+        buf, buf_w, jnp.int32(1), jnp.zeros((2,), jnp.int32),
+        jnp.zeros((2,), jnp.float32), recons)
+    assert float(mw) == 0.0
+    # round 2: client 0's banked weighted sum matures exactly
+    m, mw, buf, buf_w = F.consume_and_bank(
+        buf, buf_w, jnp.int32(2), jnp.zeros((2,), jnp.int32),
+        jnp.zeros((2,), jnp.float32), recons)
+    assert float(mw) == 0.5
+    np.testing.assert_allclose(np.asarray(m["w"]), 0.5 * 2.0 * np.ones(3))
+    assert float(F.pending_mass(buf_w)) == 0.0
+
+
+def test_stale_payloads_arrive_next_round(world):
+    """All clients straggle by exactly 1: round 0 applies nothing, round 1
+    applies round 0's payloads (weight 1/2 each, renormalized)."""
+    model, params, batches = world
+    ccfg = _ccfg("topk")
+    strat, _ = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+    run = RunConfig(fl=cfg, staleness_max=1)
+
+    def sched(r, n):
+        return F.FaultSchedule(jnp.ones((n,), bool), jnp.ones((n,), bool),
+                               jnp.ones((n,), jnp.int32),
+                               jnp.full((n,), 0.5, jnp.float32))
+
+    rf = jax.jit(build_fl_round(model.loss, strat, run,
+                                fault_schedule_fn=sched))
+    st = fl_init(params, N, strat, staleness_max=1)
+    key = jax.random.PRNGKey(3)
+    st, m0 = rf(st, batches, jax.random.fold_in(key, 0))
+    _tree_eq(st.params, params, "round-0 params (all payloads in flight)")
+    assert float(m0.arrivals) == 0.0
+    assert float(F.pending_mass(st.buf_w)) == pytest.approx(N * 0.5)
+    st, m1 = rf(st, batches, jax.random.fold_in(key, 1))
+    assert float(m1.arrivals) == pytest.approx(N * 0.5)
+    assert float(m1.update_norm) > 0.0
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                               jax.tree_util.tree_leaves(params)))
+
+
+def test_staleness_requires_buffered_state(world):
+    model, params, batches = world
+    ccfg = _ccfg("topk")
+    strat, _ = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+    rf = build_fl_round(model.loss, strat,
+                        RunConfig(fl=cfg, staleness_max=2, straggler_rate=0.5))
+    with pytest.raises(ValueError, match="staleness buffer"):
+        rf(fl_init(params, N, strat), batches, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: cadence invariance of the fault stream
+# ---------------------------------------------------------------------------
+
+
+def _engine(model, params, run, strat, train, parts):
+    eng = RoundEngine(
+        build_fl_round(model.loss, strat, run),
+        vision_batcher(train.x, train.y, device_pools(parts), K, B),
+        seed=0)
+    return eng, eng.init_state(params, N,
+                               strategy=strat,
+                               staleness_max=run.staleness_max)
+
+
+def test_fault_cadence_invariance():
+    """Same fault_seed ⇒ same per-round fault pattern regardless of how
+    rounds are grouped into scan blocks: blocks [4] ≡ [2, 2] bitwise."""
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_class_image_dataset
+
+    model = make_paper_model("mlp", SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    train = make_class_image_dataset(jax.random.PRNGKey(1), 200, (4, 4, 1), 3)
+    parts = dirichlet_partition(train.y, N, alpha=0.5, seed=0,
+                                min_per_client=B)
+    ccfg = _ccfg("topk")
+    strat, _ = _strategy(model, ccfg)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+    run = RunConfig(fl=cfg, participation_rate=0.75, drop_rate=0.3,
+                    fault_seed=13)
+
+    e1, s1 = _engine(model, params, run, strat, train, parts)
+    s1, _ = e1.run_block(s1, 4)
+    e2, s2 = _engine(model, params, run, strat, train, parts)
+    s2, _ = e2.run_block(s2, 2)
+    s2, _ = e2.run_block(s2, 2)
+    _tree_eq(s1.params, s2.params, "cadence params")
+    _tree_eq(s1.ef, s2.ef, "cadence ef")
+    assert int(s1.round) == int(s2.round) == 4
+
+    # different fault_seed ⇒ different trajectory (the knob is live)
+    e3, s3 = _engine(model, params, run.replace(fault_seed=14), strat,
+                     train, parts)
+    s3, _ = e3.run_block(s3, 4)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                               jax.tree_util.tree_leaves(s3.params)))
+
+
+# ---------------------------------------------------------------------------
+# transport hardening
+# ---------------------------------------------------------------------------
+
+_SPEC = FrameSpec("identity", "fp32", (8,))
+
+
+def _valid_frame(round_idx=0, client_idx=0) -> np.ndarray:
+    head = np.asarray(encode_header(_SPEC, round_idx, client_idx))
+    return np.concatenate([head, np.arange(8, dtype=np.uint8)])
+
+
+def test_linkstats_requires_open_round():
+    ch = InProcessChannel()
+    with pytest.raises(RuntimeError, match="begin_round"):
+        ch.send_up(np.zeros((4,), np.uint8))
+    ch.begin_round()
+    ch.send_up(np.zeros((4,), np.uint8))
+    assert ch.uplink.per_round == [4]
+    ch.begin_round()
+    ch.send_up(np.zeros((2,), np.uint8))
+    assert ch.uplink.per_round == [4, 2]
+    assert ch.uplink.total_bytes == 6 and ch.uplink.messages == 2
+
+
+def test_faulty_channel_is_deterministic_and_billed():
+    frames = [_valid_frame(client_idx=i) for i in range(64)]
+
+    def run(seed):
+        ch = FaultyChannel(drop_prob=0.25, truncate_prob=0.25,
+                           bitflip_prob=0.25, seed=seed)
+        ch.begin_round()
+        return [ch.send_up(f) for f in frames], ch
+
+    got1, ch1 = run(7)
+    got2, _ = run(7)
+    for a, b in zip(got1, got2):
+        assert (a is None) == (b is None)
+        if a is not None:
+            np.testing.assert_array_equal(a, b)
+    # the wire billed every send, including the ones it then ate
+    assert ch1.uplink.messages == 64
+    assert ch1.uplink.total_bytes == sum(f.nbytes for f in frames)
+    assert ch1.dropped > 0 and ch1.corrupted > 0
+    # corrupted frames are rejected with a typed error, never silently kept
+    for f in got1:
+        if f is None:
+            continue
+        try:
+            hdr = parse_header(f)
+            assert hdr["kind"] == "identity"
+        except FrameError:
+            pass
+
+
+def test_engine_deliver_retry_and_give_up():
+    frames = [_valid_frame(client_idx=i) for i in range(8)]
+    # clean wire: everything arrives first try
+    ch = FaultyChannel(seed=0)
+    ch.begin_round()
+    rep = RoundEngine.deliver(ch, frames)
+    assert rep.delivered.all() and rep.retries == 0
+    assert all(f is not None for f in rep.frames)
+    # dead wire: give-up after the policy's retries, all marked dropped —
+    # the delivered=False branch of the in-round fault model
+    dead = FaultyChannel(drop_prob=1.0, seed=0)
+    dead.begin_round()
+    rep = RoundEngine.deliver(dead, frames, policy=RetryPolicy(max_retries=2))
+    assert not rep.delivered.any()
+    assert rep.retries == 8 * 2
+    assert dead.uplink.messages == 8 * 3        # every re-send was billed
+    # flaky wire: retries fill in most of the losses
+    flaky = FaultyChannel(drop_prob=0.4, bitflip_prob=0.3, seed=3)
+    flaky.begin_round()
+    rep = RoundEngine.deliver(flaky, frames,
+                              policy=RetryPolicy(max_retries=4))
+    assert rep.delivered.sum() > 0 and rep.retries > 0
+
+
+# ---------------------------------------------------------------------------
+# parse_header fuzz: typed errors, never cryptic unpack exceptions
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=3),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_parse_header_fuzz_typed_errors(mode, seed):
+    rng = np.random.default_rng(seed)
+    base = _valid_frame(round_idx=3, client_idx=9)
+    if mode == 0:       # truncation at a random point
+        buf = base[: int(rng.integers(0, base.size))]
+    elif mode == 1:     # random single-bit flips
+        buf = base.copy()
+        for _ in range(int(rng.integers(1, 6))):
+            buf[int(rng.integers(0, buf.size))] ^= np.uint8(
+                1 << int(rng.integers(0, 8)))
+    elif mode == 2:     # pure garbage
+        buf = rng.integers(0, 256, size=int(rng.integers(0, 64)),
+                           dtype=np.uint8)
+    else:               # valid frame, possibly extended with trailing junk
+        buf = np.concatenate(
+            [base, rng.integers(0, 256, size=int(rng.integers(0, 8)),
+                                dtype=np.uint8)])
+    try:
+        hdr = parse_header(buf)
+    except FrameError:
+        return          # a typed rejection is always acceptable
+    # no exception: the frame must be a coherent self-description
+    assert hdr["nbytes"] == buf.size
+    assert hdr["payload_bytes"] == sum(hdr["section_bytes"])
+    assert isinstance(hdr["kind"], str) and isinstance(hdr["policy"], str)
+
+
+def test_parse_header_typed_error_subclasses():
+    base = _valid_frame()
+    with pytest.raises(TruncatedFrameError):
+        parse_header(base[:8])
+    bad = base.copy()
+    bad[0] ^= 0xFF
+    with pytest.raises(BadMagicError):
+        parse_header(bad)
+    # every typed error is a FrameError is a ValueError (compat contract)
+    assert issubclass(BadMagicError, FrameError)
+    assert issubclass(FrameError, ValueError)

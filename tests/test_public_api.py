@@ -23,16 +23,18 @@ GOLDEN = {
         "strategy_kinds",
     ],
     "repro.fl": [
-        "ClientPools", "EngineStats", "FLShardings", "FLState",
-        "RoundEngine", "aggregate", "build_fl_round", "device_pools",
+        "ClientPools", "DeliveryReport", "EngineStats", "FLShardings",
+        "FLState", "FaultSchedule", "RetryPolicy", "RoundEngine",
+        "aggregate", "build_fl_round", "device_pools", "fault_schedule",
         "fl_init", "fl_round", "local_train", "make_fl_round",
-        "make_fl_shardings", "matched_compressors", "payload_budget",
-        "server_update", "token_batcher", "vision_batcher",
+        "make_fl_shardings", "matched_compressors", "null_schedule",
+        "payload_budget", "residual_mass_conserved", "server_update",
+        "token_batcher", "vision_batcher",
     ],
     "repro.comm": [
-        "CODECS", "Codec", "FrameSpec", "InProcessChannel", "LinkStats",
-        "make_codec", "parse_header", "register_codec", "register_kind_id",
-        "wire_bytes",
+        "CODECS", "Codec", "FaultyChannel", "FrameError", "FrameSpec",
+        "InProcessChannel", "LinkStats", "make_codec", "parse_header",
+        "register_codec", "register_kind_id", "wire_bytes",
     ],
     "repro.configs": [
         "ARCH_IDS", "CompressorConfig", "FLConfig", "INPUT_SHAPES",
@@ -120,11 +122,56 @@ def test_run_config_validates_and_roundtrips():
     with pytest.raises(ValueError, match="num_micro"):
         RunConfig(num_micro=0)
 
+    # fault-knob validation (repro.fl.faults semantics)
+    with pytest.raises(ValueError, match="participation_rate"):
+        RunConfig(participation_rate=0.0)
+    with pytest.raises(ValueError, match="drop_rate"):
+        RunConfig(drop_rate=1.0)
+    with pytest.raises(ValueError, match="staleness_max"):
+        RunConfig(staleness_max=-1)
+    with pytest.raises(ValueError, match="requires staleness_max"):
+        RunConfig(straggler_rate=0.5)
+    with pytest.raises(ValueError, match="fused_decode is incompatible"):
+        RunConfig(fused_decode=True, staleness_max=2)
+
     run = RunConfig(
         fl=FLConfig(num_clients=4, local_steps=2, local_lr=0.05,
                     compressor=CompressorConfig(kind="stc", keep_ratio=0.1)),
-        wire="codec", fused_decode=False, num_micro=2)
+        wire="codec", fused_decode=False, num_micro=2,
+        participation_rate=0.7, drop_rate=0.3, straggler_rate=0.25,
+        staleness_max=2, fault_seed=11)
+    assert run.has_faults
     # through actual JSON text, not just dicts
     back = RunConfig.from_json(json.loads(json.dumps(run.to_json())))
     assert back == run
     assert back.fl.compressor.kind == "stc"
+    assert back.staleness_max == 2 and back.fault_seed == 11
+
+    # a default config is fault-free and stays that way through JSON
+    assert not RunConfig().has_faults
+    assert not RunConfig.from_json(
+        json.loads(json.dumps(RunConfig().to_json()))).has_faults
+
+
+def test_run_config_fault_knobs_from_flags():
+    """The training CLI's argparse namespace reaches the fault model."""
+    import argparse
+
+    from repro.configs.base import CompressorConfig
+    from repro.configs.run import RunConfig
+
+    ns = argparse.Namespace(
+        clients=4, local_steps=1, lr=0.05, batch=8, rounds=2, seed=0,
+        participation_rate=0.5, drop_rate=0.25, straggler_rate=0.0,
+        staleness_max=0, fault_seed=3)
+    run = RunConfig.from_flags(
+        ns, compressor=CompressorConfig(kind="identity"))
+    assert run.participation_rate == 0.5
+    assert run.drop_rate == 0.25
+    assert run.fault_seed == 3
+    assert run.has_faults
+    # flag-less namespaces (older drivers) keep the zero-fault defaults
+    bare = argparse.Namespace(clients=4, local_steps=1, lr=0.05, batch=8,
+                              rounds=2, seed=0)
+    assert not RunConfig.from_flags(
+        bare, compressor=CompressorConfig(kind="identity")).has_faults

@@ -39,6 +39,21 @@ def test_shard_map_wire_mode_equals_vmap_float(multidev_scenario):
     multidev_scenario("wire")
 
 
+def test_shard_map_fault_pipeline(multidev_scenario):
+    """The fault model on the 8-way sharded fan-out (the shard_map half of
+    the 28-combo matrix; the vmap half runs in tests/test_faults.py):
+    null-schedule masked rounds bitwise the unfaulted shard_map rounds for
+    every (kind × wire) combo (fused threesfc at the established 1e-5
+    width-lowering tolerance); a 50%-dropout schedule produces the same
+    state as the vmap fan-out and drops the identical client set (mask
+    transparency — state at 1e-6, since the renormalized masked mean is no
+    longer the exact all-true identity under the 8-way psum); and the compiled
+    faulted round keeps ZERO collectives inside the per-client
+    ``CLIENT_SCOPE`` encode region (the masks ride the client axis, they
+    never synchronize it)."""
+    multidev_scenario("faults")
+
+
 # ---------------------------------------------------------------------------
 # child scenarios (8 devices)
 # ---------------------------------------------------------------------------
@@ -335,11 +350,152 @@ def scenario_wire():
     print("ok threesfc")
 
 
+def scenario_faults():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm import make_codec
+    from repro.configs.base import CompressorConfig, FLConfig
+    from repro.configs.run import RunConfig
+    from repro.core.strategy import make_strategy
+    from repro.fl import faults as F
+    from repro.fl.round import CLIENT_SCOPE, build_fl_round, fl_init
+    from repro.fl.sharding import make_fl_shardings
+    from repro.models.build import vision_syn_spec
+    from repro.models.cnn import VisionSpec, make_paper_model
+    from repro.utils import hlo_analyzer as H
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    sh = make_fl_shardings(mesh)
+    N, K, B = 8, 1, 8
+    SPEC = VisionSpec("tiny", (4, 4, 1), 3)
+    model = make_paper_model("mlp", SPEC)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (N, K, B, 4, 4, 1)),
+        "y": jax.random.randint(jax.random.PRNGKey(2), (N, K, B), 0, 3),
+    }
+    key = jax.random.PRNGKey(5)
+
+    def build(kind, wire, fused, parallel="shard_map", sched_fn=None, **rkw):
+        ccfg = CompressorConfig(kind=kind, keep_ratio=0.2, syn_steps=2,
+                                syn_lr=0.1,
+                                error_feedback=kind != "identity")
+        spec = vision_syn_spec(SPEC, ccfg)
+        strat = make_strategy(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                              local_lr=0.05)
+        cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                       local_batch=B, compressor=ccfg)
+        run = RunConfig(fl=cfg, wire=wire, fused_decode=fused,
+                        client_parallel=parallel,
+                        mesh=mesh if parallel == "shard_map" else None, **rkw)
+        codec = make_codec(ccfg, params, syn_spec=spec,
+                           syn_loss_fn=model.syn_loss) \
+            if wire == "codec" else None
+        rf = build_fl_round(model.loss, strat, run, codec=codec,
+                            fault_schedule_fn=sched_fn)
+        return jax.jit(rf), strat
+
+    def run2(rf):
+        st = fl_init(params, N)
+        for r in range(2):
+            st, m = rf(st, batches, jax.random.fold_in(key, r))
+        return st, m
+
+    # 1) zero-fault bitwise on the sharded fan-out: every combo of the
+    #    shard_map half of the matrix, masked-with-null vs plain
+    ALL = ("identity", "topk", "randk", "signsgd", "stc", "threesfc",
+           "fedsynth")
+    CODEC = ("identity", "topk", "signsgd", "stc", "threesfc")
+    combos = ([(k, "float", False) for k in ALL]
+              + [(k, "codec", False) for k in CODEC]
+              + [("threesfc", "float", True), ("threesfc", "codec", True)])
+    for kind, wire, fused in combos:
+        rf, _ = build(kind, wire, fused)
+        rfn, _ = build(kind, wire, fused,
+                       sched_fn=lambda r, n: F.null_schedule(n))
+        sa, ma = run2(rf)
+        sb, mb = run2(rfn)
+        tag = f"{kind}/{wire}{'/fused' if fused else ''}"
+        if fused:
+            # the all-ones payload weight shifts XLA's fusion of the
+            # gathered batched backward — the same width-sensitive
+            # batched-dot lowering already pinned at 1e-5 for fused/8-way
+            # threesfc above (observed ~5e-10 absolute); vmap fused is
+            # bitwise (tests/test_faults.py)
+            for a, b in zip(jax.tree_util.tree_leaves((sa.params, sa.ef)),
+                            jax.tree_util.tree_leaves((sb.params, sb.ef))):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=0, atol=1e-5,
+                                           err_msg=f"{tag} state")
+        else:
+            _tree_equal(sa.params, sb.params, f"{tag} shard_map params")
+            _tree_equal(sa.ef, sb.ef, f"{tag} shard_map ef")
+        # the scalar loss metric is reduced across devices and XLA may
+        # reassociate the 8-way reduction differently between the two
+        # programs (observed 1 ulp) — the vmap half of the matrix pins
+        # the metrics bitwise
+        np.testing.assert_allclose(np.asarray(ma.loss), np.asarray(mb.loss),
+                                   rtol=0, atol=1e-6,
+                                   err_msg=f"{tag} loss")
+        assert float(mb.arrivals) == float(N)
+        print(f"ok null {tag}")
+
+    # 2) mask fan-out transparency: a real dropout pattern produces the
+    #    same state on vmap and shard_map and drops the same clients.
+    #    With a non-trivial mask the N/cnt renormalized aggregation is no
+    #    longer the exact all-true mean identity, so the 8-way psum may
+    #    reassociate it differently from vmap's single-program reduction
+    #    (observed 1 ulp, ~4e-11 absolute) — pin at 1e-6 like the loss
+    fkw = dict(participation_rate=0.75, drop_rate=0.5, fault_seed=7)
+    rf_v, _ = build("topk", "float", False, parallel="vmap", **fkw)
+    rf_s, _ = build("topk", "float", False, **fkw)
+    sv, mv = run2(rf_v)
+    ss, ms = run2(rf_s)
+    for a, b in zip(jax.tree_util.tree_leaves((sv.params, sv.ef)),
+                    jax.tree_util.tree_leaves((ss.params, ss.ef))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6,
+                                   err_msg="faulted vmap-vs-shard_map state")
+    np.testing.assert_array_equal(np.asarray(mv.arrivals),
+                                  np.asarray(ms.arrivals))
+    assert float(ms.arrivals) < float(N)   # the pattern actually dropped
+    print("ok fault transparency")
+
+    # 3) HLO gate: the participation/delivery masks ride the client axis —
+    #    ZERO collectives inside the per-client encode region
+    ccfg = CompressorConfig(kind="topk", keep_ratio=0.2)
+    spec = vision_syn_spec(SPEC, ccfg)
+    strat = make_strategy(ccfg, loss_fn=model.syn_loss, syn_spec=spec,
+                          local_lr=0.05)
+    cfg = FLConfig(num_clients=N, local_steps=K, local_lr=0.05,
+                   local_batch=B, compressor=ccfg)
+    run = RunConfig(fl=cfg, client_parallel="shard_map", mesh=mesh, **fkw)
+    rf = build_fl_round(model.loss, strat, run)
+    abstract = {
+        "x": jax.ShapeDtypeStruct((N, K, B, 4, 4, 1), jnp.float32),
+        "y": jax.ShapeDtypeStruct((N, K, B), jnp.int32),
+    }
+    compiled = jax.jit(
+        rf,
+        in_shardings=(sh.state, sh.client, sh.replicated),
+        out_shardings=(sh.state, sh.replicated),
+    ).lower(fl_init(params, N), abstract,
+            jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+    scoped = [c for c in H.collectives(compiled.as_text())
+              if CLIENT_SCOPE in c.op_name]
+    assert not scoped, \
+        f"faulted client encode region grew collectives: {scoped}"
+    print("ok hlo gate")
+
+
 SCENARIOS = {
     "bitexact": scenario_bitexact,
     "ef_donation": scenario_ef_donation,
     "sharding_units": scenario_sharding_units,
     "wire": scenario_wire,
+    "faults": scenario_faults,
 }
 
 
