@@ -29,6 +29,13 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
   regardless of HEAD), any increase in fedavg/threesfc 30%-dropout
   rounds-to-target vs HEAD, or the dropout-convergence gate flipping
   false.
+* ``BENCH_transport.json``: the byte-match, socket-bitwise, residual-
+  conservation, or straggle-isolation gate false (all fresh-run absolute —
+  a wire that bills more than the codec bytes, diverges from the
+  in-process oracle, leaks EF mass, or lets one straggler stall the round
+  is a bug regardless of HEAD), any growth in the settled per-round
+  uplink bytes vs HEAD (tiny or mlp scenario), or any ``pass_*`` gate
+  flipping false.
 
 Artifacts present in the working tree but not at HEAD are new benches:
 reported and skipped. Exit 2 on usage/setup errors (not a git checkout,
@@ -198,12 +205,41 @@ def check_faults(fresh, base, tol):
     return probs
 
 
+def check_transport(fresh, base, tol):
+    probs = []
+    # absolute: these are correctness properties of the socket transport
+    # (exact billing, oracle parity, EF conservation, deadline isolation),
+    # not trajectories — they fail even in the commit introducing the bench
+    for flag, why in (
+            ("pass_bytes_match", "wire bills more than N*nbytes (or "
+             "diverges from BENCH_wire's measured bytes)"),
+            ("pass_socket_bitwise", "live socket round no longer bitwise "
+             "equal to the in-process oracle on the same fault pattern"),
+            ("pass_residual_conservation", "EF residual mass not conserved "
+             "on a dropped frame"),
+            ("pass_straggle_isolation", "a straggler's sleep leaked into "
+             "the round wall clock (deadline no longer isolates)")):
+        if _get(fresh, flag) is False:
+            probs.append(f"{flag} is false: {why}")
+    # vs HEAD: settled-round uplink bytes must not grow
+    for field in ("faulted.settled_null_round_bytes",
+                  "bytes_mlp.per_message_bytes",
+                  "bytes_mlp.n8_round_bytes"):
+        f_v, b_v = _get(fresh, field), _get(base, field)
+        if f_v is not None and b_v is not None and f_v > b_v:
+            probs.append(f"{field} grew: {b_v} -> {f_v}")
+    if _get(base, "pass") and not _get(fresh, "pass"):
+        probs.append("pass gate flipped to false")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
     "BENCH_collectives.json": check_collectives,
     "BENCH_wire.json": check_wire,
     "BENCH_faults.json": check_faults,
+    "BENCH_transport.json": check_transport,
 }
 
 

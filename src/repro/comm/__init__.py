@@ -3,16 +3,27 @@
 ``frame``  — versioned fixed-layout header; static sizes usable under jit.
 ``codec``  — per-compressor encode/decode between payloads and uint8 frames,
              registered per ``CompressorConfig.kind`` (``register_codec``).
-``channel``— in-process transport moving only encoded buffers, with byte
-             counters; ``FaultyChannel`` injects seeded transport faults
-             (drop/truncate/bit-flip) for the fault harness.
+``channel``— ``Channel`` transport interface + in-process transport moving
+             only encoded buffers, with byte counters; ``FaultyChannel``
+             injects seeded transport faults (drop/truncate/bit-flip) for
+             the fault harness.
+``transport`` — real length-prefixed socket transport (``SocketServer`` +
+             worker-side ``ServerLink``) between a server process and N
+             locally spawned client workers; deadlines, backoff retries,
+             and heartbeat liveness map every wire fault onto the
+             ``delivered=False`` branch of the fault model.
 """
-from repro.comm.channel import FaultyChannel, InProcessChannel, LinkStats
+from repro.comm.channel import (Channel, FaultyChannel, InProcessChannel,
+                                LinkStats)
 from repro.comm.codec import (CODECS, Codec, make_codec, register_codec,
                               wire_bytes)
 from repro.comm.frame import (FrameError, FrameSpec, parse_header,
                               register_kind_id)
+from repro.comm.transport import (ProtocolError, ServerLink, SocketServer,
+                                  spawn_local_workers)
 
-__all__ = ["CODECS", "Codec", "FaultyChannel", "FrameError", "FrameSpec",
-           "InProcessChannel", "LinkStats", "make_codec", "parse_header",
-           "register_codec", "register_kind_id", "wire_bytes"]
+__all__ = ["CODECS", "Channel", "Codec", "FaultyChannel", "FrameError",
+           "FrameSpec", "InProcessChannel", "LinkStats", "ProtocolError",
+           "ServerLink", "SocketServer", "make_codec", "parse_header",
+           "register_codec", "register_kind_id", "spawn_local_workers",
+           "wire_bytes"]

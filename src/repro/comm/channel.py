@@ -1,18 +1,28 @@
-"""In-process channel: only encoded buffers move between the two halves.
+"""Channel interface + in-process transport: only encoded buffers move.
 
-``InProcessChannel`` is the transport stand-in for the codec subsystem: the
-client half may hand it nothing but framed ``uint8`` buffers (anything else
-is a type error — that is the point: no float trees on the wire), and the
-server half receives host copies, with per-round uplink/downlink byte
-counters. It is deliberately host-level — the jitted round keeps buffers on
-device; this channel is how the *driver* layer (benchmarks, future async /
-multi-process transports on the ROADMAP) moves and bills them.
+``Channel`` is the interface every transport implements — per-direction
+``LinkStats`` byte accounting opened in explicit per-round buckets by
+``begin_round()``. Two transports live behind it today:
+``InProcessChannel`` (below, the host-side stand-in the codec benchmarks
+bill against) and ``repro.comm.transport.SocketServer`` (a real
+length-prefixed socket transport between processes). Both bill *data*
+frames into ``LinkStats`` only, so "bytes per round" means the same thing
+— serialized codec frames — regardless of what carries them.
+
+``InProcessChannel``'s client half may hand it nothing but framed
+``uint8`` buffers (anything else is a type error — that is the point: no
+float trees on the wire), and the server half receives host copies. It is
+deliberately host-level — the jitted round keeps buffers on device; this
+channel is how the *driver* layer (benchmarks, the live round loop) moves
+and bills them.
 
 ``FaultyChannel`` wraps any channel with seeded transport-fault injection
 (frame drop / truncation / bit flips) for the fault harness: corrupted
 frames reach the receiver, whose ``frame.parse_header`` rejects them with a
 typed ``FrameError`` that the driver maps to dropout via the retry policy
-(``repro.fl.engine.RoundEngine.deliver``).
+(``repro.fl.engine.RoundEngine.deliver``). Faults are attributed per round
+(``dropped_per_round``/``corrupted_per_round``, LinkStats-style) on top of
+the running totals.
 """
 from __future__ import annotations
 
@@ -46,9 +56,11 @@ class LinkStats:
         self.per_round.append(0)
 
 
-class InProcessChannel:
-    """Moves encoded uint8 buffers client->server (uplink) and
-    server->client (downlink), billing every byte."""
+class Channel:
+    """Transport interface: uplink/downlink byte accounting in per-round
+    buckets. Subclasses move the bytes however they like (in-process hand-
+    off, sockets, ...) but bill every data frame through ``LinkStats`` so
+    per-round byte numbers are transport-independent."""
 
     def __init__(self):
         self.uplink = LinkStats()
@@ -65,6 +77,11 @@ class InProcessChannel:
         self.downlink._new_round()
         self._round = len(self.uplink.per_round) - 1
         return self._round
+
+
+class InProcessChannel(Channel):
+    """Moves encoded uint8 buffers client->server (uplink) and
+    server->client (downlink), billing every byte."""
 
     @staticmethod
     def _as_wire(buf) -> np.ndarray:
@@ -97,6 +114,14 @@ class FaultyChannel:
     random prefix, or hit with single-bit flips, with the configured
     probabilities. Faults are deterministic from ``seed`` and the send
     sequence, so a fuzz failure replays exactly.
+
+    Faults are counted both as running totals (``dropped``/``corrupted``)
+    and per round (``dropped_per_round``/``corrupted_per_round``, buckets
+    opened by ``begin_round()`` like ``LinkStats.per_round``) so a fault
+    bench can attribute every injected fault to the round it hit. Rounds
+    must therefore be opened on THIS wrapper, not its inner channel —
+    bypassing it would desynchronize the fault buckets from the byte
+    buckets and is rejected.
     """
 
     def __init__(self, inner: Optional[InProcessChannel] = None, *,
@@ -116,6 +141,8 @@ class FaultyChannel:
         self._rng = np.random.default_rng(seed)
         self.dropped = 0
         self.corrupted = 0
+        self.dropped_per_round: List[int] = []
+        self.corrupted_per_round: List[int] = []
 
     # accounting passthrough
     @property
@@ -131,18 +158,28 @@ class FaultyChannel:
         return self.inner.round
 
     def begin_round(self) -> int:
+        self.dropped_per_round.append(0)
+        self.corrupted_per_round.append(0)
         return self.inner.begin_round()
 
     def _corrupt(self, b: np.ndarray) -> Optional[np.ndarray]:
+        if not self.dropped_per_round:
+            raise RuntimeError(
+                "send before begin_round() on the FaultyChannel: open the "
+                "round on the wrapper (not its inner channel) so per-round "
+                "fault attribution stays aligned with the byte buckets")
         r = self._rng
         if r.random() < self.drop_prob:
             self.dropped += 1
+            self.dropped_per_round[-1] += 1
             return None
         if r.random() < self.truncate_prob and b.size > 0:
             self.corrupted += 1
+            self.corrupted_per_round[-1] += 1
             return b[: int(r.integers(0, b.size))].copy()
         if r.random() < self.bitflip_prob and b.size > 0:
             self.corrupted += 1
+            self.corrupted_per_round[-1] += 1
             b = b.copy()
             for _ in range(int(r.integers(1, self.max_bitflips + 1))):
                 pos = int(r.integers(0, b.size))

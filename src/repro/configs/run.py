@@ -30,6 +30,7 @@ from repro.configs.base import CompressorConfig, FLConfig
 
 CLIENT_PARALLEL_MODES = ("vmap", "shard_map")
 WIRE_MODES = ("float", "codec")
+TRANSPORT_MODES = ("inproc", "socket")
 
 
 @dataclass(frozen=True)
@@ -64,6 +65,23 @@ class RunConfig:
     # PRNG seed of the fault stream — schedules are a pure function of
     # (fault_seed, round), independent of eval-block grouping
     fault_seed: int = 0
+    # -- transport (repro.comm.transport) ----------------------------------
+    # how rounds move: 'inproc' (one process, the engine's scanned loop) or
+    # 'socket' (a SocketServer + N worker processes over the live loop)
+    transport: str = "inproc"
+    # hard bound on one round's collect phase: a straggler delays the
+    # round by at most this, never by its full delay
+    round_deadline_s: float = 30.0
+    # per-client receive window before the first RESEND ...
+    recv_timeout_s: float = 2.0
+    # ... growing by this factor per attempt (exponential backoff)
+    recv_backoff: float = 2.0
+    # RESENDs before a client is given up as dropped this round
+    transport_retries: int = 2
+    # worker liveness tick period (heartbeats flow even mid-compute) ...
+    heartbeat_s: float = 0.5
+    # ... and how long silence lasts before a worker counts as dead
+    liveness_timeout_s: float = 5.0
     # runtime state, never serialized; required for shard_map, optional
     # for vmap (pins the fused path's replication constraint)
     mesh: Optional[Any] = field(default=None, compare=False)
@@ -95,6 +113,48 @@ class RunConfig:
             raise ValueError(
                 "straggler_rate > 0 requires staleness_max >= 1 (a straggler "
                 "needs a buffer slot to land in)")
+        if self.transport not in TRANSPORT_MODES:
+            raise ValueError(
+                f"transport must be 'inproc' or 'socket', got "
+                f"{self.transport!r}")
+        if self.transport == "socket":
+            if self.wire != "codec":
+                raise ValueError(
+                    "transport='socket' requires wire='codec': only framed "
+                    "uint8 buffers cross a real wire")
+            if self.client_parallel != "vmap":
+                raise ValueError(
+                    "transport='socket' requires client_parallel='vmap': "
+                    "worker processes ARE the client fan-out (shard_map is "
+                    "the in-process mesh path)")
+            if self.has_faults:
+                raise ValueError(
+                    "transport='socket' is incompatible with the schedule-"
+                    "driven fault knobs: on a live wire, faults are real "
+                    "transport events (timeouts, corruption, dead workers) "
+                    "mapped onto delivered=False — inject them at the "
+                    "transport (SocketServer rx_filter) instead")
+        if self.round_deadline_s <= 0.0:
+            raise ValueError(
+                f"round_deadline_s must be > 0, got {self.round_deadline_s}")
+        if self.recv_timeout_s <= 0.0:
+            raise ValueError(
+                f"recv_timeout_s must be > 0, got {self.recv_timeout_s}")
+        if self.recv_backoff < 1.0:
+            raise ValueError(
+                f"recv_backoff must be >= 1.0, got {self.recv_backoff}")
+        if self.transport_retries < 0:
+            raise ValueError(
+                f"transport_retries must be >= 0, got "
+                f"{self.transport_retries}")
+        if self.heartbeat_s <= 0.0:
+            raise ValueError(
+                f"heartbeat_s must be > 0, got {self.heartbeat_s}")
+        if self.liveness_timeout_s <= self.heartbeat_s:
+            raise ValueError(
+                f"liveness_timeout_s ({self.liveness_timeout_s}) must "
+                f"exceed heartbeat_s ({self.heartbeat_s}) — a window "
+                f"shorter than one heartbeat declares every worker dead")
         if self.fused_decode and self.staleness_max > 0:
             raise ValueError(
                 "fused_decode is incompatible with staleness_max > 0: the "
@@ -129,6 +189,17 @@ class RunConfig:
         from repro.fl.sharding import make_fl_shardings
         return make_fl_shardings(self.mesh).axes
 
+    def retry_policy(self):
+        """The transport ``RetryPolicy`` these knobs describe: retry count
+        + backoff schedule, with single-receive windows capped by the
+        round deadline (no receive may outwait the round)."""
+        from repro.fl.engine import RetryPolicy
+        return RetryPolicy(
+            max_retries=self.transport_retries,
+            recv_timeout_s=self.recv_timeout_s,
+            recv_backoff=self.recv_backoff,
+            max_timeout_s=max(self.round_deadline_s, self.recv_timeout_s))
+
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)
 
@@ -147,6 +218,13 @@ class RunConfig:
             "straggler_rate": self.straggler_rate,
             "staleness_max": self.staleness_max,
             "fault_seed": self.fault_seed,
+            "transport": self.transport,
+            "round_deadline_s": self.round_deadline_s,
+            "recv_timeout_s": self.recv_timeout_s,
+            "recv_backoff": self.recv_backoff,
+            "transport_retries": self.transport_retries,
+            "heartbeat_s": self.heartbeat_s,
+            "liveness_timeout_s": self.liveness_timeout_s,
         }
 
     @classmethod
@@ -164,6 +242,13 @@ class RunConfig:
                    straggler_rate=d.get("straggler_rate", 0.0),
                    staleness_max=d.get("staleness_max", 0),
                    fault_seed=d.get("fault_seed", 0),
+                   transport=d.get("transport", "inproc"),
+                   round_deadline_s=d.get("round_deadline_s", 30.0),
+                   recv_timeout_s=d.get("recv_timeout_s", 2.0),
+                   recv_backoff=d.get("recv_backoff", 2.0),
+                   transport_retries=d.get("transport_retries", 2),
+                   heartbeat_s=d.get("heartbeat_s", 0.5),
+                   liveness_timeout_s=d.get("liveness_timeout_s", 5.0),
                    mesh=mesh)
 
     @classmethod
@@ -194,4 +279,11 @@ class RunConfig:
                    straggler_rate=getattr(args, "straggler_rate", 0.0),
                    staleness_max=getattr(args, "staleness_max", 0),
                    fault_seed=getattr(args, "fault_seed", 0),
+                   transport=getattr(args, "transport", "inproc"),
+                   round_deadline_s=getattr(args, "round_deadline_s", 30.0),
+                   recv_timeout_s=getattr(args, "recv_timeout_s", 2.0),
+                   recv_backoff=getattr(args, "recv_backoff", 2.0),
+                   transport_retries=getattr(args, "transport_retries", 2),
+                   heartbeat_s=getattr(args, "heartbeat_s", 0.5),
+                   liveness_timeout_s=getattr(args, "liveness_timeout_s", 5.0),
                    mesh=mesh)

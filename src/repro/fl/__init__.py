@@ -4,8 +4,8 @@ from repro.fl.round import (FLState, build_fl_round, fl_init, fl_round,
                             make_fl_round)
 from repro.fl.budget import matched_compressors, payload_budget
 from repro.fl.engine import (ClientPools, DeliveryReport, EngineStats,
-                             RetryPolicy, RoundEngine, device_pools,
-                             token_batcher, vision_batcher)
+                             LiveRoundLoop, RetryPolicy, RoundEngine,
+                             device_pools, token_batcher, vision_batcher)
 from repro.fl.faults import (FaultSchedule, fault_schedule, null_schedule,
                              residual_mass_conserved)
 from repro.fl.sharding import FLShardings, make_fl_shardings

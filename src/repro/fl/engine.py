@@ -83,6 +83,7 @@ oracle (tests/test_shard_round.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -90,6 +91,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.round import FLState, RoundMetrics, fl_init
+from repro.fl.server import server_update
 
 PyTree = Any
 # batch_fn(data_key, round_idx) -> per-client stacked batch pytree (N, K, B, ...)
@@ -200,12 +202,48 @@ class RunHistory(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
-    """Transport give-up policy: how often a rejected uplink frame is
-    re-sent before the server treats that client as DROPPED this round
-    (the fault semantics of ``repro.fl.faults`` — the client's EF keeps
-    the whole update, the server renormalizes over what arrived)."""
+    """Transport give-up policy: how often a rejected/late uplink frame is
+    re-requested before the server treats that client as DROPPED this
+    round (the fault semantics of ``repro.fl.faults`` — the client's EF
+    keeps the whole update, the server renormalizes over what arrived).
+
+    Every retry is a re-send of the SAME frame and is billed by the
+    channel like any other send — retransmission is never free, so a lossy
+    link shows up in the per-round byte buckets, not just the fault
+    counters.
+
+    The timeout schedule generalizes the retry count to a live transport:
+    attempt ``a`` waits ``recv_timeout_s * recv_backoff**a`` seconds
+    (exponential backoff), capped at ``max_timeout_s`` — which the socket
+    driver sets to the round deadline, since no single receive should
+    outwait the round itself.
+    """
 
     max_retries: int = 2
+    recv_timeout_s: float = 2.0
+    recv_backoff: float = 2.0
+    max_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.recv_timeout_s <= 0.0:
+            raise ValueError(
+                f"recv_timeout_s must be > 0, got {self.recv_timeout_s}")
+        if self.recv_backoff < 1.0:
+            raise ValueError(
+                f"recv_backoff must be >= 1.0 (a shrinking retry window "
+                f"races its own resends), got {self.recv_backoff}")
+        if self.max_timeout_s < self.recv_timeout_s:
+            raise ValueError(
+                f"max_timeout_s ({self.max_timeout_s}) must be >= "
+                f"recv_timeout_s ({self.recv_timeout_s})")
+
+    def timeout(self, attempt: int) -> float:
+        """Receive window for attempt ``attempt`` (0-based)."""
+        return min(self.recv_timeout_s * self.recv_backoff ** attempt,
+                   self.max_timeout_s)
 
 
 class DeliveryReport(NamedTuple):
@@ -397,3 +435,116 @@ class RoundEngine:
             np.stack([np.asarray(getattr(m, f)) for m in out])
             for f in RoundMetrics._fields])
         return state, metrics
+
+
+class LiveRoundLoop:
+    """The server half of a live cross-process round over a transport.
+
+    Where ``RoundEngine`` scans rounds inside one device program (clients
+    are a vmap axis), ``LiveRoundLoop`` drives real client *processes*
+    through a ``repro.comm.transport.SocketServer``: broadcast the params
+    frame, ``collect`` the uplink under the round deadline with
+    backoff/retries/liveness, ACK each worker its delivered verdict, and
+    aggregate on the server.
+
+    The server step mirrors the in-process faulted pipeline EXACTLY
+    (``fl.round``'s codec decode -> recon -> masked mean x N/count ->
+    ``server_update``), with every transport outcome — timeout, corrupt
+    frame, dead worker — mapped onto the ``delivered=False`` mask. That is
+    what makes the live loop bitwise-comparable to the in-process oracle
+    on identical fault patterns (gated in ``benchmarks/bench_transport.py``):
+    undelivered rows are zero placeholders whose decoded garbage the
+    masked ``where`` never reads, exactly like the oracle's masked rows.
+
+    ``participate_fn(round) -> (N,) bool`` drives partial participation
+    (non-participants are told to sit the round out; their EF freezes —
+    the ``participate=False`` branch). ``on_round(record, report)`` fires
+    after every round with the history record + raw ``DeliveryReport``.
+    """
+
+    def __init__(self, server, strategy, codec, run, params, *,
+                 policy: Optional[RetryPolicy] = None,
+                 participate_fn=None, on_round=None):
+        # lazy comm imports: fl never hard-depends on the wire layer
+        from repro.comm.codec import make_codec
+        from repro.configs.base import CompressorConfig
+
+        self.server = server
+        self.strategy = strategy
+        self.codec = codec
+        self.cfg = run
+        self.policy = policy if policy is not None else run.retry_policy()
+        self.participate_fn = participate_fn
+        self.on_round = on_round
+        self.params = jax.tree_util.tree_map(jnp.copy, params)
+        self.history: List[Dict[str, Any]] = []
+        N = run.fl.num_clients
+        server_lr = run.fl.server_lr
+        # the downlink broadcast is the raw params frame (identity codec);
+        # compressing it too is the E-3SFC roadmap item, not this loop's
+        self._down = make_codec(
+            CompressorConfig(kind="identity", error_feedback=False), params)
+        self._enc = jax.jit(
+            lambda p, r: self._down.encode(p, round_idx=r))
+
+        def step(p, bufs, delivered):
+            # bitwise mirror of fl.round's faulted codec path at S=0,
+            # weights=None: vmap decode -> recon -> mean(where) * N/count
+            canon = jax.vmap(codec.decode)(bufs)
+            recons = jax.vmap(lambda c: codec.recon_tree(c, p))(canon)
+            cnt = jnp.sum(delivered.astype(jnp.float32))
+            ratio = jnp.where(cnt > 0, N / cnt, 0.0)
+            agg = jax.tree_util.tree_map(
+                lambda x: jnp.mean(
+                    jnp.where(delivered.reshape((-1,) + (1,) * (x.ndim - 1)),
+                              x, 0), axis=0) * ratio,
+                recons)
+            return server_update(p, agg, server_lr)
+
+        self._step = jax.jit(step)
+        self._placeholder = np.zeros((codec.nbytes,), np.uint8)
+
+    def run(self, num_rounds: int, *, deadline_s: Optional[float] = None,
+            policy: Optional[RetryPolicy] = None):
+        """Drive ``num_rounds`` live rounds; returns the final params.
+        Per-round records (wall clock, delivered mask, retries, byte
+        buckets, dead set, reported losses) accumulate in ``history``.
+        ``deadline_s``/``policy`` override the loop's configuration for
+        these rounds only — warm-up rounds (first-dispatch jit compilation
+        happens inside the workers' round 0) want generous windows,
+        measured straggle rounds tight ones."""
+        N = self.cfg.fl.num_clients
+        dl = self.cfg.round_deadline_s if deadline_s is None else deadline_s
+        pol = self.policy if policy is None else policy
+        for _ in range(num_rounds):
+            r = self.server.begin_round()
+            t0 = time.perf_counter()
+            down = np.asarray(self._enc(self.params, jnp.uint32(r)))
+            part = (np.ones((N,), bool) if self.participate_fn is None
+                    else np.asarray(self.participate_fn(r), bool))
+            self.server.broadcast_round(r, down, part)
+            live = np.zeros((N,), bool)
+            live[self.server.live_workers()] = True
+            rep = self.server.collect(
+                r, part & live, policy=pol, deadline_s=dl)
+            self.server.send_acks(r, rep.delivered)
+            bufs = np.stack(
+                [np.asarray(f, np.uint8) if f is not None
+                 else self._placeholder for f in rep.frames])
+            self.params = self._step(self.params, jnp.asarray(bufs),
+                                     jnp.asarray(rep.delivered))
+            jax.block_until_ready(self.params)
+            rec = {"round": r,
+                   "wall_s": time.perf_counter() - t0,
+                   "participate": part,
+                   "delivered": rep.delivered.copy(),
+                   "retries": rep.retries,
+                   "bytes_up": self.server.uplink.per_round[-1],
+                   "bytes_down": self.server.downlink.per_round[-1],
+                   "dead": sorted(set(range(N))
+                                  - set(self.server.live_workers())),
+                   "losses": self.server.pop_metrics(r)}
+            self.history.append(rec)
+            if self.on_round is not None:
+                self.on_round(rec, rep)
+        return self.params

@@ -28,6 +28,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import time
 
 import jax
@@ -42,8 +43,8 @@ from repro.core.strategy import make_strategy
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_class_image_dataset, make_token_dataset
 from repro.fl.budget import matched_compressors
-from repro.fl.engine import (RoundEngine, device_pools, token_batcher,
-                             vision_batcher)
+from repro.fl.engine import (RetryPolicy, RoundEngine, device_pools,
+                             token_batcher, vision_batcher)
 from repro.fl.round import build_fl_round
 from repro.fl.sharding import make_fl_shardings
 from repro.launch.mesh import make_host_mesh
@@ -85,6 +86,78 @@ def _write_run_config(out_dir: str, run: RunConfig) -> None:
         json.dump(run.to_json(), f, indent=1)
 
 
+def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
+    """The live multi-process path: a ``SocketServer`` + N spawned workers
+    driven by ``repro.fl.engine.LiveRoundLoop`` — framed rounds over real
+    sockets with the run's deadline/backoff/liveness knobs. Same metrics
+    JSONL + checkpoint contract as the in-process path."""
+    from repro.comm.transport import SocketServer, spawn_local_workers
+    from repro.fl.engine import LiveRoundLoop
+    from repro.launch.worker import vision_setup
+
+    test = make_class_image_dataset(
+        jax.random.fold_in(jax.random.PRNGKey(args.seed), 1), 1000,
+        spec.input_shape, spec.num_classes)
+
+    @jax.jit
+    def eval_acc(p):
+        return accuracy(model.apply(p, jnp.asarray(test.x)),
+                        jnp.asarray(test.y))
+
+    _write_run_config(args.out, run)
+    t0 = time.time()
+    server = SocketServer(args.clients,
+                          heartbeat_s=run.heartbeat_s,
+                          liveness_timeout_s=run.liveness_timeout_s)
+    procs = spawn_local_workers(server.address, range(args.clients))
+    try:
+        server.wait_ready()
+        server.send_setup(vision_setup(run, model=args.model, spec=spec,
+                                       train_size=args.train_size))
+        with open(os.path.join(args.out, "metrics.jsonl"), "w") as log:
+            def on_round(rec, rep):
+                r = rec["round"] + 1
+                if r % args.eval_every and r != args.rounds:
+                    return
+                out = {"round": r,
+                       "loss": float(np.mean(list(rec["losses"].values())))
+                       if rec["losses"] else None,
+                       "acc": float(eval_acc(loop.params)),
+                       "delivered": int(rec["delivered"].sum()),
+                       "retries": rec["retries"],
+                       "bytes_up": rec["bytes_up"],
+                       "wall_s": round(rec["wall_s"], 4),
+                       "elapsed_s": round(time.time() - t0, 1)}
+                print(json.dumps(out))
+                log.write(json.dumps(out) + "\n")
+                log.flush()
+
+            loop = LiveRoundLoop(server, strategy, codec, run, params,
+                                 on_round=on_round)
+            # round 0 jit-compiles the client step inside every worker; a
+            # tight configured deadline would mark them all undelivered
+            # before they ever ran. Boot patiently, then enforce the
+            # configured deadline/backoff from round 1 on.
+            boot = max(run.round_deadline_s, 300.0)
+            loop.run(1, deadline_s=boot,
+                     policy=RetryPolicy(max_retries=0, recv_timeout_s=boot,
+                                        max_timeout_s=boot))
+            final = (loop.run(args.rounds - 1) if args.rounds > 1
+                     else loop.params)
+    finally:
+        server.stop()
+        for p in procs:
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                p.kill()
+    save_checkpoint(os.path.join(args.out, "final"), final,
+                    meta={"model": args.model, "dataset": args.dataset,
+                          "compressor": args.compressor,
+                          "rounds": args.rounds, "transport": "socket"})
+    print(f"checkpoint -> {args.out}/final")
+
+
 def train_vision(args):
     spec = DATASETS[args.dataset]
     model = make_paper_model(args.model, spec)
@@ -94,11 +167,19 @@ def train_vision(args):
     syn_spec = vision_syn_spec(spec, comp)
     strategy = make_strategy(comp, loss_fn=model.syn_loss, syn_spec=syn_spec,
                              local_lr=args.lr)
-    mode, mesh, shardings = make_fanout(args)
+    if args.transport == "socket":
+        # worker processes ARE the fan-out; the mesh paths stay in-process
+        mode, mesh, shardings = "vmap", None, None
+    else:
+        mode, mesh, shardings = make_fanout(args)
     run = RunConfig.from_flags(args, compressor=comp, client_parallel=mode,
                                mesh=mesh)
     codec = strategy.wire_codec(params, policy=run.wire_policy) \
         if run.wire == "codec" else None
+    if run.transport == "socket":
+        return train_vision_socket(args, spec=spec, model=model,
+                                   params=params, strategy=strategy,
+                                   run=run, codec=codec)
 
     key = jax.random.PRNGKey(args.seed)
     train = make_class_image_dataset(key, args.train_size, spec.input_shape,
@@ -143,6 +224,11 @@ def train_vision(args):
 
 
 def train_lm_smoke(args):
+    if getattr(args, "transport", "inproc") == "socket":
+        raise ValueError(
+            "--transport socket drives vision runs only: the worker rebuilds "
+            "the client computation from the vision SETUP blob "
+            "(repro.launch.worker); the LM smoke path is in-process")
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -228,6 +314,30 @@ def main(argv=None):
     ap.add_argument("--fault-seed", type=int, default=0, dest="fault_seed",
                     help="seed of the fault stream (schedules are a pure "
                          "function of (fault_seed, round))")
+    # transport (repro.comm.transport): socket mode spawns N worker
+    # processes and runs framed rounds over real sockets
+    ap.add_argument("--transport", default="inproc",
+                    choices=["inproc", "socket"],
+                    help="how rounds move: one in-process program (the "
+                         "engine's scanned loop) or a SocketServer + N "
+                         "worker processes (requires --wire codec)")
+    ap.add_argument("--round-deadline-s", type=float, default=30.0,
+                    dest="round_deadline_s",
+                    help="hard bound on one round's collect phase")
+    ap.add_argument("--recv-timeout-s", type=float, default=2.0,
+                    dest="recv_timeout_s",
+                    help="per-client receive window before the first RESEND")
+    ap.add_argument("--recv-backoff", type=float, default=2.0,
+                    dest="recv_backoff",
+                    help="exponential backoff factor per retry attempt")
+    ap.add_argument("--transport-retries", type=int, default=2,
+                    dest="transport_retries",
+                    help="RESENDs before a client counts as dropped")
+    ap.add_argument("--heartbeat-s", type=float, default=0.5,
+                    dest="heartbeat_s", help="worker liveness tick period")
+    ap.add_argument("--liveness-timeout-s", type=float, default=5.0,
+                    dest="liveness_timeout_s",
+                    help="silence window after which a worker counts as dead")
     ap.add_argument("--out", default="experiments/train_run")
     args = ap.parse_args(argv)
     if args.arch and args.smoke:

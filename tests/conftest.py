@@ -1,4 +1,5 @@
 import os
+import signal
 import sys
 
 import pytest
@@ -39,3 +40,42 @@ def multidev_scenario():
             f"--- stdout ---\n{p.stdout}\n--- stderr ---\n{p.stderr}")
 
     return run_scenario
+
+
+# ---------------------------------------------------------------------------
+# transport marker: live-socket tests get a hard wall-clock ceiling
+# ---------------------------------------------------------------------------
+
+TRANSPORT_TIMEOUT_S = 120
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "transport: live socket-transport test (real sockets / subprocess "
+        "workers); armed with a hard SIGALRM timeout (default "
+        f"{TRANSPORT_TIMEOUT_S}s, override per-test with timeout=<s>) so a "
+        "hung wire fails loudly instead of hanging the suite")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    m = item.get_closest_marker("transport")
+    if m is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    limit = int(m.kwargs.get("timeout", TRANSPORT_TIMEOUT_S))
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"transport test exceeded the hard {limit}s timeout — a socket "
+            f"or worker subprocess is hung (the transport's own deadlines "
+            f"should have fired long before this)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(limit)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -495,3 +495,75 @@ def test_parse_header_typed_error_subclasses():
     # every typed error is a FrameError is a ValueError (compat contract)
     assert issubclass(BadMagicError, FrameError)
     assert issubclass(FrameError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# FaultyChannel per-round fault attribution + downlink broadcast coverage
+# ---------------------------------------------------------------------------
+
+
+def test_faulty_channel_per_round_fault_attribution():
+    """Every injected fault lands in the bucket of the round it hit, the
+    buckets sum to the running totals, and opening rounds on the inner
+    channel (desynchronizing buckets) is rejected."""
+    ch = FaultyChannel(drop_prob=0.3, bitflip_prob=0.3, seed=5)
+    per_round = []
+    for r in range(4):
+        assert ch.begin_round() == r
+        for i in range(32):
+            ch.send_up(_valid_frame(round_idx=r, client_idx=i))
+        per_round.append((ch.dropped_per_round[-1],
+                          ch.corrupted_per_round[-1]))
+    assert len(ch.dropped_per_round) == len(ch.corrupted_per_round) == 4
+    assert sum(ch.dropped_per_round) == ch.dropped > 0
+    assert sum(ch.corrupted_per_round) == ch.corrupted > 0
+    # buckets are per-round snapshots, not cumulative
+    assert ch.dropped_per_round == [d for d, _ in per_round]
+    assert ch.corrupted_per_round == [c for _, c in per_round]
+    # byte buckets stay aligned: one bucket per round, every send billed
+    assert len(ch.uplink.per_round) == 4
+    assert ch.uplink.messages == 4 * 32
+
+    # bypassing the wrapper is an error, not silent desynchronization
+    fresh = FaultyChannel(drop_prob=1.0, seed=0)
+    fresh.inner.begin_round()
+    with pytest.raises(RuntimeError, match="begin_round"):
+        fresh.send_up(_valid_frame())
+
+
+def test_faulty_channel_downlink_broadcast():
+    """Server->client broadcasts ride the same faulty wire: every byte of
+    every broadcast is billed downlink, drops surface as None, and a
+    corrupted broadcast is rejected by the frame parser with a typed
+    FrameError — a client never trains on a silently mangled model."""
+    frame = _valid_frame()
+    ch = FaultyChannel(drop_prob=0.25, truncate_prob=0.25,
+                       bitflip_prob=0.25, seed=11)
+    ch.begin_round()
+    n_clients = 64
+    outcomes = {"ok": 0, "dropped": 0, "rejected": 0, "payload_flip": 0}
+    for _ in range(n_clients):
+        got = ch.send_down(frame)
+        if got is None:
+            outcomes["dropped"] += 1
+            continue
+        try:
+            parse_header(got)
+        except FrameError:
+            outcomes["rejected"] += 1       # typed, never an unpack crash
+            continue
+        if np.array_equal(got, frame):
+            outcomes["ok"] += 1             # intact broadcasts arrive bitwise
+        else:
+            # payload-region bitflip: header parses, body differs — the
+            # channel still attributed it as corrupted (pinned below)
+            outcomes["payload_flip"] += 1
+    # the wire billed every broadcast, including the ones it then ate
+    assert ch.downlink.messages == n_clients
+    assert ch.downlink.per_round == [n_clients * frame.nbytes]
+    assert outcomes["dropped"] == ch.dropped > 0
+    assert outcomes["ok"] > 0
+    # every non-intact delivered frame was counted corrupted by the wire
+    assert (outcomes["rejected"] + outcomes["payload_flip"]
+            <= ch.corrupted == ch.corrupted_per_round[0])
+    assert ch.corrupted > 0

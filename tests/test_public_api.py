@@ -24,17 +24,19 @@ GOLDEN = {
     ],
     "repro.fl": [
         "ClientPools", "DeliveryReport", "EngineStats", "FLShardings",
-        "FLState", "FaultSchedule", "RetryPolicy", "RoundEngine",
-        "aggregate", "build_fl_round", "device_pools", "fault_schedule",
-        "fl_init", "fl_round", "local_train", "make_fl_round",
-        "make_fl_shardings", "matched_compressors", "null_schedule",
-        "payload_budget", "residual_mass_conserved", "server_update",
-        "token_batcher", "vision_batcher",
+        "FLState", "FaultSchedule", "LiveRoundLoop", "RetryPolicy",
+        "RoundEngine", "aggregate", "build_fl_round", "device_pools",
+        "fault_schedule", "fl_init", "fl_round", "local_train",
+        "make_fl_round", "make_fl_shardings", "matched_compressors",
+        "null_schedule", "payload_budget", "residual_mass_conserved",
+        "server_update", "token_batcher", "vision_batcher",
     ],
     "repro.comm": [
-        "CODECS", "Codec", "FaultyChannel", "FrameError", "FrameSpec",
-        "InProcessChannel", "LinkStats", "make_codec", "parse_header",
-        "register_codec", "register_kind_id", "wire_bytes",
+        "CODECS", "Channel", "Codec", "FaultyChannel", "FrameError",
+        "FrameSpec", "InProcessChannel", "LinkStats", "ProtocolError",
+        "ServerLink", "SocketServer", "make_codec", "parse_header",
+        "register_codec", "register_kind_id", "spawn_local_workers",
+        "wire_bytes",
     ],
     "repro.configs": [
         "ARCH_IDS", "CompressorConfig", "FLConfig", "INPUT_SHAPES",
@@ -175,3 +177,82 @@ def test_run_config_fault_knobs_from_flags():
                               rounds=2, seed=0)
     assert not RunConfig.from_flags(
         bare, compressor=CompressorConfig(kind="identity")).has_faults
+
+
+def test_retry_policy_validates_and_schedules():
+    """Transport give-up policy: invalid knobs are rejected at
+    construction, and the backoff schedule is the documented
+    ``min(recv_timeout_s * recv_backoff**attempt, max_timeout_s)``.
+    (Retries re-send the SAME frame and are billed like any send —
+    pinned behaviorally in tests/test_faults.py and test_transport.py.)"""
+    from repro.fl.engine import RetryPolicy
+
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="recv_timeout_s"):
+        RetryPolicy(recv_timeout_s=0.0)
+    with pytest.raises(ValueError, match="recv_backoff"):
+        RetryPolicy(recv_backoff=0.5)
+    with pytest.raises(ValueError, match="max_timeout_s"):
+        RetryPolicy(recv_timeout_s=5.0, max_timeout_s=1.0)
+    pol = RetryPolicy(max_retries=0, recv_timeout_s=1.5, recv_backoff=3.0,
+                      max_timeout_s=9.0)
+    assert [pol.timeout(a) for a in range(4)] == [1.5, 4.5, 9.0, 9.0]
+
+
+def test_run_config_transport_knobs_validate_and_roundtrip():
+    import json
+
+    from repro.configs.base import CompressorConfig, FLConfig
+    from repro.configs.run import RunConfig
+
+    with pytest.raises(ValueError, match="transport must be"):
+        RunConfig(transport="carrier-pigeon")
+    with pytest.raises(ValueError, match="requires wire='codec'"):
+        RunConfig(transport="socket", wire="float")
+    with pytest.raises(ValueError, match="incompatible with the schedule"):
+        RunConfig(transport="socket", wire="codec", drop_rate=0.3)
+    with pytest.raises(ValueError, match="round_deadline_s"):
+        RunConfig(round_deadline_s=0.0)
+    with pytest.raises(ValueError, match="transport_retries"):
+        RunConfig(transport_retries=-1)
+    with pytest.raises(ValueError, match="liveness_timeout_s"):
+        RunConfig(heartbeat_s=2.0, liveness_timeout_s=1.0)
+
+    run = RunConfig(
+        fl=FLConfig(num_clients=3, local_steps=2, local_lr=0.05,
+                    compressor=CompressorConfig(kind="stc", keep_ratio=0.1)),
+        wire="codec", transport="socket", round_deadline_s=12.5,
+        recv_timeout_s=1.25, recv_backoff=1.5, transport_retries=3,
+        heartbeat_s=0.25, liveness_timeout_s=4.0)
+    back = RunConfig.from_json(json.loads(json.dumps(run.to_json())))
+    assert back == run
+    assert back.transport == "socket" and back.round_deadline_s == 12.5
+    # the knobs compile into the transport's RetryPolicy, deadline-capped
+    pol = run.retry_policy()
+    assert pol.max_retries == 3 and pol.recv_timeout_s == 1.25
+    assert pol.max_timeout_s == 12.5     # no receive outwaits the round
+
+
+def test_run_config_transport_knobs_from_flags():
+    """The training CLI's --transport family reaches the socket driver."""
+    import argparse
+
+    from repro.configs.base import CompressorConfig
+    from repro.configs.run import RunConfig
+
+    ns = argparse.Namespace(
+        clients=3, local_steps=1, lr=0.05, batch=8, rounds=2, seed=0,
+        wire="codec", transport="socket", round_deadline_s=7.0,
+        recv_timeout_s=0.5, recv_backoff=1.5, transport_retries=1,
+        heartbeat_s=0.2, liveness_timeout_s=2.0)
+    run = RunConfig.from_flags(
+        ns, compressor=CompressorConfig(kind="stc", keep_ratio=0.1))
+    assert run.transport == "socket" and run.round_deadline_s == 7.0
+    assert run.transport_retries == 1 and run.heartbeat_s == 0.2
+    # flag-less namespaces (older drivers) keep the in-process default
+    bare = argparse.Namespace(clients=4, local_steps=1, lr=0.05, batch=8,
+                              rounds=2, seed=0)
+    assert RunConfig.from_flags(
+        bare, compressor=CompressorConfig(kind="identity")).transport \
+        == "inproc"
