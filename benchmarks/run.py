@@ -16,9 +16,9 @@ import time
 
 from benchmarks import (bench_collectives, bench_faults, bench_fedsynth,
                         bench_fig1, bench_fig7, bench_kernels,
-                        bench_round_engine, bench_ssweep, bench_table2,
-                        bench_table3, bench_table4, bench_transport,
-                        bench_wire)
+                        bench_recovery, bench_round_engine, bench_ssweep,
+                        bench_table2, bench_table3, bench_table4,
+                        bench_transport, bench_wire)
 
 BENCHES = {
     "fig1": bench_fig1.run,          # convergence vs rate
@@ -34,6 +34,7 @@ BENCHES = {
     "wire": bench_wire.run,                  # serialized codec bytes + parity
     "faults": bench_faults.run,              # dropout/staleness degradation
     "transport": bench_transport.run,        # live socket rounds vs oracle
+    "recovery": bench_recovery.run,          # chaos-kill: resume + rejoin
 }
 
 

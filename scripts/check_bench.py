@@ -37,6 +37,14 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
   uplink bytes vs HEAD (tiny or mlp scenario), or any ``pass_*`` gate
   flipping false.
 
+* ``BENCH_recovery.json``: the bitwise-resume, rejoin-EF-conservation, or
+  previous-checkpoint-survives gate false (all fresh-run absolute — a
+  resume that diverges from the uninterrupted run, a rejoiner whose
+  residual leaks mass, or a crash that corrupts the last recovery point is
+  a bug regardless of HEAD), the rejoin 2x-convergence gate false, any
+  growth in the chaos run's rounds-to-target vs HEAD, or any ``pass_*``
+  gate flipping false.
+
 Artifacts present in the working tree but not at HEAD are new benches:
 reported and skipped. Exit 2 on usage/setup errors (not a git checkout,
 malformed JSON).
@@ -233,6 +241,36 @@ def check_transport(fresh, base, tol):
     return probs
 
 
+def check_recovery(fresh, base, tol):
+    probs = []
+    # absolute: recovery correctness properties — bitwise resume, EF mass
+    # conservation across a worker outage, and durability of the previous
+    # recovery point — fail even in the commit introducing the bench
+    for flag, why in (
+            ("pass_bitwise_resume", "a SIGKILLed-and-resumed run no longer "
+             "replays bitwise equal to the uninterrupted oracle"),
+            ("pass_rejoin_ef_conserved", "a rejoining worker's EF residual "
+             "is not bitwise the banked commit (mass leaked across the "
+             "outage)"),
+            ("pass_rejoin_convergence", "the crash+rejoin run needs more "
+             "than 2x the no-crash rounds to the target loss"),
+            ("pass_prev_ckpt_survives", "a crash during a checkpoint write "
+             "corrupted the previously committed recovery point")):
+        if _get(fresh, flag) is False:
+            probs.append(f"{flag} is false: {why}")
+    # vs HEAD: the chaos run's rounds-to-target must not regress
+    f_r = _get(fresh, "worker_rejoin.rounds_to_target.chaos")
+    b_r = _get(base, "worker_rejoin.rounds_to_target.chaos")
+    if b_r is not None and f_r is None:
+        probs.append(f"chaos run no longer reaches the target loss "
+                     f"(was {b_r} rounds)")
+    elif f_r is not None and b_r is not None and f_r > b_r:
+        probs.append(f"chaos rounds-to-target regressed {b_r} -> {f_r}")
+    if _get(base, "pass") and not _get(fresh, "pass"):
+        probs.append("pass gate flipped to false")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
@@ -240,6 +278,7 @@ CHECKS = {
     "BENCH_wire.json": check_wire,
     "BENCH_faults.json": check_faults,
     "BENCH_transport.json": check_transport,
+    "BENCH_recovery.json": check_recovery,
 }
 
 

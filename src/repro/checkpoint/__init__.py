@@ -1,1 +1,24 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import (MANIFEST_VERSION, CheckpointError,
+                                   CheckpointKeyError, CheckpointManager,
+                                   CheckpointMissingError,
+                                   CheckpointShapeError,
+                                   CheckpointVersionError, load_arrays,
+                                   load_checkpoint, load_fl_checkpoint,
+                                   load_manifest, save_checkpoint,
+                                   save_fl_checkpoint)
+
+__all__ = [
+    "MANIFEST_VERSION",
+    "CheckpointError",
+    "CheckpointKeyError",
+    "CheckpointManager",
+    "CheckpointMissingError",
+    "CheckpointShapeError",
+    "CheckpointVersionError",
+    "load_arrays",
+    "load_checkpoint",
+    "load_fl_checkpoint",
+    "load_manifest",
+    "save_checkpoint",
+    "save_fl_checkpoint",
+]

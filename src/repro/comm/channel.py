@@ -55,6 +55,20 @@ class LinkStats:
     def _new_round(self):
         self.per_round.append(0)
 
+    def snapshot(self) -> dict:
+        """JSON-serializable ledger state (what a checkpoint carries)."""
+        return {"total_bytes": int(self.total_bytes),
+                "messages": int(self.messages),
+                "per_round": [int(b) for b in self.per_round]}
+
+    def restore(self, d: dict) -> None:
+        """Reinstate a ``snapshot()``: a resumed run keeps billing into the
+        same buckets, so round numbering (``begin_round`` indexes off the
+        bucket count) continues from where the checkpoint left off."""
+        self.total_bytes = int(d["total_bytes"])
+        self.messages = int(d["messages"])
+        self.per_round = [int(b) for b in d["per_round"]]
+
 
 class Channel:
     """Transport interface: uplink/downlink byte accounting in per-round
@@ -77,6 +91,19 @@ class Channel:
         self.downlink._new_round()
         self._round = len(self.uplink.per_round) - 1
         return self._round
+
+    def ledger(self) -> dict:
+        """Both directions' ``LinkStats.snapshot()`` — the byte ledger a
+        full-state checkpoint carries."""
+        return {"uplink": self.uplink.snapshot(),
+                "downlink": self.downlink.snapshot()}
+
+    def restore_ledger(self, d: dict) -> None:
+        """Reinstate a ``ledger()`` snapshot; the next ``begin_round``
+        continues the restored round numbering."""
+        self.uplink.restore(d["uplink"])
+        self.downlink.restore(d["downlink"])
+        self._round = max(len(self.uplink.per_round) - 1, 0)
 
 
 class InProcessChannel(Channel):

@@ -45,6 +45,25 @@ a *slow* worker (straggler) is alive-but-late (timeout/backoff path) while
 a *dead* one (killed process) is EOF — detected immediately, excluded,
 never hung on. A silent-but-connected worker (e.g. SIGSTOP) trips the
 ``liveness_timeout_s`` window instead.
+
+Elastic membership (JOIN / REJOIN)
+----------------------------------
+The worker set is no longer frozen at HELLO time. After each EF commit a
+worker pushes its residual, tagged with the committed round (MSG_EF_PUSH),
+and the server banks the latest push per client (``ef_bank``) — so the
+server always holds every client's last-committed EF slice, which is the
+ONLY state a worker process owns. A worker that connects after SETUP was
+broadcast (a fresh joiner, or one whose process was killed and restarted)
+receives SETUP + MSG_EF_SYNC(its banked slice) back-to-back under one send
+lock, rebuilds its computation, installs the residual, and re-enters the
+round set at the next broadcast. Its missed rounds were ordinary
+``delivered=False`` rounds on the server (dead workers are excluded, EF
+frozen in the bank), so residual-mass conservation holds bitwise across
+the death — the rejoin gate of ``benchmarks/bench_recovery``. The same
+bank, snapshotted into full-state checkpoints (``seed_ef_bank`` on
+restore), is what makes a *server* restart bitwise-resumable: re-synced
+workers restart from exactly the residual the checkpointed round left
+them with.
 """
 from __future__ import annotations
 
@@ -76,6 +95,8 @@ MSG_EF_REQ = 7       # server -> worker: dump your EF residual (empty body)
 MSG_EF_DUMP = 8      # worker -> server: raw f32 EF leaf stream
 MSG_METRIC = 9       # worker -> server: u32 round | f32 local loss
 MSG_STOP = 10        # server -> worker: shut down (empty body)
+MSG_EF_PUSH = 11     # worker -> server: u32 committed round | f32 EF stream
+MSG_EF_SYNC = 12     # server -> worker: u32 banked round | f32 EF stream
 
 FLAG_PARTICIPATE = 1  # ROUND flags bit 0: train this round (vs. sit out)
 
@@ -159,8 +180,14 @@ class SocketServer(Channel):
         self._rx: "queue.Queue" = queue.Queue()
         self._ef: Dict[int, bytes] = {}
         self._ef_evt: Dict[int, threading.Event] = {}
+        # cid -> (last committed round, flat f32 EF stream): the newest
+        # MSG_EF_PUSH per client — the recovery source for worker rejoin
+        # and the slice full-state checkpoints carry
+        self._ef_bank: Dict[int, Tuple[int, bytes]] = {}
+        self._setup: Optional[bytes] = None
         self._metrics: Dict[Tuple[int, int], float] = {}
         self._lock = threading.Lock()
+        self._bank_cv = threading.Condition(self._lock)
         self._stopping = False
         self._threads: List[threading.Thread] = []
         t = threading.Thread(target=self._accept_loop, daemon=True)
@@ -217,6 +244,11 @@ class SocketServer(Channel):
                                  daemon=True)
             t.start()
             self._threads.append(t)
+            if self._setup is not None:
+                # mid-run joiner (fresh, or a killed worker's restarted
+                # process): hand it the session state it missed — SETUP plus
+                # its banked EF slice — and it re-enters at the next round
+                self._send_join_state(cid)
 
     def _recv_loop(self, cid: int, conn: socket.socket):
         try:
@@ -233,6 +265,12 @@ class SocketServer(Channel):
                         evt = self._ef_evt.get(cid)
                     if evt is not None:
                         evt.set()
+                elif mtype == MSG_EF_PUSH and len(body) >= 4:
+                    self.overhead_up += _HDR.size + len(body)
+                    (rnd,) = struct.unpack_from("<I", body)
+                    with self._bank_cv:
+                        self._ef_bank[cid] = (rnd, body[4:])
+                        self._bank_cv.notify_all()
                 elif mtype == MSG_METRIC and len(body) == 8:
                     self.overhead_up += _HDR.size + 8
                     rnd, loss = struct.unpack("<If", body)
@@ -288,10 +326,69 @@ class SocketServer(Channel):
 
     def send_setup(self, setup: Dict) -> None:
         """Broadcast the JSON setup blob every worker rebuilds its model /
-        data / strategy from (see ``repro.launch.worker``)."""
-        body = json.dumps(setup).encode("utf-8")
+        data / strategy from (see ``repro.launch.worker``). The blob is
+        retained so late joiners get it too (``_send_join_state``); any
+        pre-seeded EF bank entry (a resumed server) rides along."""
+        self._setup = json.dumps(setup).encode("utf-8")
         for cid in sorted(self._conns):
-            self.overhead_down += self._send_or_bury(cid, MSG_SETUP, body)
+            self._send_join_state(cid)
+
+    def _send_join_state(self, cid: int) -> None:
+        """SETUP + (banked) EF_SYNC to one worker, back-to-back under one
+        send lock — a concurrently-broadcast ROUND can never interleave
+        between them, so the worker always installs its residual BEFORE it
+        computes anything."""
+        conn = self._conns.get(cid)
+        if conn is None or self._setup is None:
+            return
+        msgs = [(MSG_SETUP, self._setup)]
+        with self._lock:
+            bank = self._ef_bank.get(cid)
+        if bank is not None:
+            rnd, stream = bank
+            msgs.append((MSG_EF_SYNC, struct.pack("<I", rnd) + stream))
+        try:
+            with self._send_locks[cid]:
+                for mtype, body in msgs:
+                    self.overhead_down += send_msg(conn, mtype, body)
+        except (ConnectionError, OSError):
+            self._mark_dead(cid)
+
+    # -- EF bank (elastic membership / recovery) ---------------------------
+    def ef_bank(self) -> Dict[int, Tuple[int, np.ndarray]]:
+        """Every client's last pushed EF slice: cid -> (committed round,
+        flat f32 stream) — what full-state checkpoints carry."""
+        with self._lock:
+            items = dict(self._ef_bank)
+        return {cid: (rnd, np.frombuffer(b, np.float32).copy())
+                for cid, (rnd, b) in items.items()}
+
+    def seed_ef_bank(self, bank: Dict[int, Tuple[int, np.ndarray]]) -> None:
+        """Pre-load the bank (a resumed server, from its checkpoint) so
+        every worker — they all rejoin a restarted server — is re-synced to
+        exactly the residual the checkpointed round left it with."""
+        with self._bank_cv:
+            for cid, (rnd, arr) in bank.items():
+                self._ef_bank[int(cid)] = (
+                    int(rnd), np.asarray(arr, np.float32).tobytes())
+            self._bank_cv.notify_all()
+
+    def wait_ef_bank(self, round_idx: int, cids, timeout: float = 30.0) -> bool:
+        """Block until every listed client's banked EF is tagged with a
+        commit >= ``round_idx`` (False on timeout). The checkpoint hook
+        calls this before snapshotting so the banked slices are exactly the
+        post-round residuals — the settle point that makes a resumed run
+        bitwise."""
+        end = time.monotonic() + timeout
+        with self._bank_cv:
+            while True:
+                if all(self._ef_bank.get(c, (-1, b""))[0] >= round_idx
+                       for c in cids):
+                    return True
+                left = end - time.monotonic()
+                if left <= 0:
+                    return False
+                self._bank_cv.wait(left)
 
     # -- the round ---------------------------------------------------------
     def broadcast_round(self, round_idx: int, down_frame,

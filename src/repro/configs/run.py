@@ -82,6 +82,12 @@ class RunConfig:
     heartbeat_s: float = 0.5
     # ... and how long silence lasts before a worker counts as dead
     liveness_timeout_s: float = 5.0
+    # -- recovery (repro.checkpoint) ---------------------------------------
+    # full-state checkpoint cadence in rounds (0 = final-only): every
+    # ckpt_every-th round boundary writes a durable recovery point the run
+    # can be resumed from bitwise (params + EF + staleness buffer + round
+    # counter + byte ledger; see repro.checkpoint.save_fl_checkpoint)
+    ckpt_every: int = 0
     # runtime state, never serialized; required for shard_map, optional
     # for vmap (pins the fused path's replication constraint)
     mesh: Optional[Any] = field(default=None, compare=False)
@@ -155,6 +161,10 @@ class RunConfig:
                 f"liveness_timeout_s ({self.liveness_timeout_s}) must "
                 f"exceed heartbeat_s ({self.heartbeat_s}) — a window "
                 f"shorter than one heartbeat declares every worker dead")
+        if self.ckpt_every < 0:
+            raise ValueError(
+                f"ckpt_every must be >= 0 (0 = final checkpoint only), got "
+                f"{self.ckpt_every}")
         if self.fused_decode and self.staleness_max > 0:
             raise ValueError(
                 "fused_decode is incompatible with staleness_max > 0: the "
@@ -225,6 +235,7 @@ class RunConfig:
             "transport_retries": self.transport_retries,
             "heartbeat_s": self.heartbeat_s,
             "liveness_timeout_s": self.liveness_timeout_s,
+            "ckpt_every": self.ckpt_every,
         }
 
     @classmethod
@@ -249,6 +260,7 @@ class RunConfig:
                    transport_retries=d.get("transport_retries", 2),
                    heartbeat_s=d.get("heartbeat_s", 0.5),
                    liveness_timeout_s=d.get("liveness_timeout_s", 5.0),
+                   ckpt_every=d.get("ckpt_every", 0),
                    mesh=mesh)
 
     @classmethod
@@ -286,4 +298,5 @@ class RunConfig:
                    transport_retries=getattr(args, "transport_retries", 2),
                    heartbeat_s=getattr(args, "heartbeat_s", 0.5),
                    liveness_timeout_s=getattr(args, "liveness_timeout_s", 5.0),
+                   ckpt_every=getattr(args, "ckpt_every", 0),
                    mesh=mesh)

@@ -382,24 +382,45 @@ class RoundEngine:
 
     def run(self, state: FLState, num_rounds: int, *, eval_every: int = 0,
             eval_fn: Optional[Callable[[FLState, RoundMetrics, int], Any]] = None,
+            ckpt_every: int = 0,
+            ckpt_fn: Optional[Callable[[FLState, int], Any]] = None,
             ) -> Tuple[FLState, RunHistory]:
         """Blocks of ``eval_every`` rounds (plus a remainder block), with
-        ``eval_fn(state, block_metrics, rounds_done)`` called at each block
+        ``eval_fn(state, block_metrics, rounds_done)`` called at each eval
         boundary — the seed drivers' eval cadence ((r+1) % eval_every == 0,
         plus the final round). ``block_metrics`` is the just-fetched stacked
-        ``RoundMetrics`` of the block, so eval-time logging costs no extra
-        sync."""
-        L = eval_every if eval_every > 0 else num_rounds
+        ``RoundMetrics`` of the block that ended at the boundary, so
+        eval-time logging costs no extra sync.
+
+        ``ckpt_fn(state, absolute_round)`` fires whenever the *absolute*
+        round counter (``FLState.round`` — a resumed state starts past 0)
+        crosses a multiple of ``ckpt_every``; both cadences are anchored on
+        the absolute counter, so a resumed run checkpoints and evals at the
+        same rounds the uninterrupted run does. Scan blocks extend to the
+        nearest upcoming boundary of either cadence — by the fold_in PRNG
+        contract the extra block splits regroup dispatches without changing
+        the trajectory (the eval-cadence-invariance property), which is
+        exactly what makes checkpoint placement bitwise-free."""
+        r0 = int(state.round)
+        target = r0 + num_rounds
+
+        def boundary(cur: int, every: int) -> int:
+            return (cur // every + 1) * every if every > 0 else target
+
         chunks: List[RoundMetrics] = []
         evals: List[Tuple[int, Any]] = []
-        done = 0
-        while done < num_rounds:
-            length = min(L, num_rounds - done)
-            state, ms = self.run_block(state, length)
-            done += length
+        cur = r0
+        while cur < target:
+            nxt = min(boundary(cur, eval_every), boundary(cur, ckpt_every),
+                      target)
+            state, ms = self.run_block(state, nxt - cur)
+            cur = nxt
             chunks.append(ms)
-            if eval_fn is not None:
-                evals.append((done, eval_fn(state, ms, done)))
+            if eval_fn is not None and (
+                    cur == target or (eval_every > 0 and cur % eval_every == 0)):
+                evals.append((cur - r0, eval_fn(state, ms, cur - r0)))
+            if ckpt_fn is not None and ckpt_every > 0 and cur % ckpt_every == 0:
+                ckpt_fn(state, cur)
         if chunks:
             metrics = RoundMetrics(*[
                 np.concatenate([np.atleast_1d(np.asarray(getattr(c, f)))
@@ -505,14 +526,22 @@ class LiveRoundLoop:
         self._placeholder = np.zeros((codec.nbytes,), np.uint8)
 
     def run(self, num_rounds: int, *, deadline_s: Optional[float] = None,
-            policy: Optional[RetryPolicy] = None):
+            policy: Optional[RetryPolicy] = None, ckpt_every: int = 0,
+            ckpt_fn=None):
         """Drive ``num_rounds`` live rounds; returns the final params.
         Per-round records (wall clock, delivered mask, retries, byte
         buckets, dead set, reported losses) accumulate in ``history``.
         ``deadline_s``/``policy`` override the loop's configuration for
         these rounds only — warm-up rounds (first-dispatch jit compilation
         happens inside the workers' round 0) want generous windows,
-        measured straggle rounds tight ones."""
+        measured straggle rounds tight ones.
+
+        ``ckpt_fn(loop, round)`` fires at round boundaries where
+        ``(round + 1) % ckpt_every == 0`` — round indices are absolute
+        (``server.begin_round`` resumes numbering from a restored ledger),
+        so a resumed loop checkpoints at the same rounds the uninterrupted
+        one does. The driver's hook is expected to settle the server's EF
+        bank (``wait_ef_bank``) before snapshotting."""
         N = self.cfg.fl.num_clients
         dl = self.cfg.round_deadline_s if deadline_s is None else deadline_s
         pol = self.policy if policy is None else policy
@@ -547,4 +576,7 @@ class LiveRoundLoop:
             self.history.append(rec)
             if self.on_round is not None:
                 self.on_round(rec, rep)
+            if ckpt_fn is not None and ckpt_every > 0 \
+                    and (r + 1) % ckpt_every == 0:
+                ckpt_fn(self, r)
         return self.params

@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import (CheckpointManager, load_fl_checkpoint,
+                              save_checkpoint, save_fl_checkpoint)
 from repro.configs.base import ARCH_IDS, CompressorConfig, get_smoke_config
 from repro.configs.run import RunConfig
 from repro.core import flat
@@ -86,6 +87,48 @@ def _write_run_config(out_dir: str, run: RunConfig) -> None:
         json.dump(run.to_json(), f, indent=1)
 
 
+def _ckpt_manager(args) -> CheckpointManager:
+    """The run's checkpoint root: ``--resume PATH`` names an existing root
+    to continue (new recovery points land in the same index); otherwise
+    ``<out>/ckpt``."""
+    return CheckpointManager(args.resume or os.path.join(args.out, "ckpt"))
+
+
+def _check_resume_config(meta, run: RunConfig) -> None:
+    """A resumed run must replay the checkpointed configuration — bitwise
+    resume is only defined for the same (seed, fault_seed, knobs)."""
+    want, got = run.to_json(), meta.get("run")
+    if got is not None and got != want:
+        diff = sorted(k for k in set(want) | set(got)
+                      if want.get(k) != got.get(k))
+        raise ValueError(
+            f"--resume configuration mismatch on {diff}: the checkpoint was "
+            f"written under a different RunConfig; rounds replayed from it "
+            f"would not be the same run")
+
+
+def _history_to_json(history):
+    """Live-loop round records -> JSON-serializable checkpoint form."""
+    return [{"round": int(rec["round"]),
+             "wall_s": float(rec["wall_s"]),
+             "participate": [bool(b) for b in rec["participate"]],
+             "delivered": [bool(b) for b in rec["delivered"]],
+             "retries": int(rec["retries"]),
+             "bytes_up": int(rec["bytes_up"]),
+             "bytes_down": int(rec["bytes_down"]),
+             "dead": [int(c) for c in rec["dead"]],
+             "losses": {str(k): float(v) for k, v in rec["losses"].items()}}
+            for rec in history]
+
+
+def _history_from_json(recs):
+    return [{**rec,
+             "participate": np.asarray(rec["participate"], bool),
+             "delivered": np.asarray(rec["delivered"], bool),
+             "losses": {int(k): float(v) for k, v in rec["losses"].items()}}
+            for rec in recs]
+
+
 def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
     """The live multi-process path: a ``SocketServer`` + N spawned workers
     driven by ``repro.fl.engine.LiveRoundLoop`` — framed rounds over real
@@ -104,17 +147,32 @@ def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
         return accuracy(model.apply(p, jnp.asarray(test.x)),
                         jnp.asarray(test.y))
 
+    mgr = _ckpt_manager(args)
+    r0, bank, history = 0, {}, []
+    if args.resume:
+        # full recovery point: params + per-client EF bank + ledger +
+        # history; every worker is a (re)joiner the server re-syncs
+        params, bank, meta = load_fl_checkpoint(mgr, params)
+        _check_resume_config(meta, run)
+        r0 = int(meta["round"])
+        history = _history_from_json(meta.get("history", []))
+        print(f"resuming from {mgr.path(r0)} at round {r0}")
+
     _write_run_config(args.out, run)
     t0 = time.time()
     server = SocketServer(args.clients,
                           heartbeat_s=run.heartbeat_s,
                           liveness_timeout_s=run.liveness_timeout_s)
+    if args.resume:
+        server.restore_ledger(meta["ledger"])  # round numbering continues
+        server.seed_ef_bank(bank)
     procs = spawn_local_workers(server.address, range(args.clients))
     try:
         server.wait_ready()
         server.send_setup(vision_setup(run, model=args.model, spec=spec,
                                        train_size=args.train_size))
-        with open(os.path.join(args.out, "metrics.jsonl"), "w") as log:
+        mode = "a" if args.resume else "w"
+        with open(os.path.join(args.out, "metrics.jsonl"), mode) as log:
             def on_round(rec, rep):
                 r = rec["round"] + 1
                 if r % args.eval_every and r != args.rounds:
@@ -132,18 +190,51 @@ def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
                 log.write(json.dumps(out) + "\n")
                 log.flush()
 
+            def ckpt_fn(lp, rnd):
+                # settle: every participating live worker must have pushed
+                # its round-``rnd`` commit before the bank is snapshotted —
+                # an unsettled recovery point would not resume bitwise
+                rec = lp.history[-1]
+                cids = [c for c in range(args.clients)
+                        if rec["participate"][c] and c not in rec["dead"]]
+                if not server.wait_ef_bank(rnd, cids, timeout=30.0):
+                    live = set(server.live_workers())
+                    cids = [c for c in cids if c in live]
+                    if not server.wait_ef_bank(rnd, cids, timeout=30.0):
+                        raise RuntimeError(
+                            f"EF bank did not settle for round {rnd}; "
+                            f"refusing to write an unsettled recovery point")
+                save_fl_checkpoint(
+                    mgr, rnd + 1, lp.params, run=run,
+                    ledger=server.ledger(),
+                    history=_history_to_json(lp.history),
+                    ef_bank=server.ef_bank(),
+                    extra={"model": args.model, "dataset": args.dataset,
+                           "compressor": args.compressor,
+                           "transport": "socket"})
+
             loop = LiveRoundLoop(server, strategy, codec, run, params,
                                  on_round=on_round)
-            # round 0 jit-compiles the client step inside every worker; a
-            # tight configured deadline would mark them all undelivered
-            # before they ever ran. Boot patiently, then enforce the
-            # configured deadline/backoff from round 1 on.
+            loop.history.extend(history)
+            ck = dict(ckpt_every=args.ckpt_every,
+                      ckpt_fn=ckpt_fn if args.ckpt_every else None)
+            # the first round jit-compiles the client step inside every
+            # worker (round 0, or the first resumed round of freshly
+            # restarted workers); a tight configured deadline would mark
+            # them all undelivered before they ever ran. Boot patiently,
+            # then enforce the configured deadline/backoff after that.
+            remaining = args.rounds - r0
             boot = max(run.round_deadline_s, 300.0)
-            loop.run(1, deadline_s=boot,
-                     policy=RetryPolicy(max_retries=0, recv_timeout_s=boot,
-                                        max_timeout_s=boot))
-            final = (loop.run(args.rounds - 1) if args.rounds > 1
-                     else loop.params)
+            if remaining > 0:
+                loop.run(1, deadline_s=boot,
+                         policy=RetryPolicy(max_retries=0,
+                                            recv_timeout_s=boot,
+                                            max_timeout_s=boot), **ck)
+                loop.run(remaining - 1, **ck)
+            final = loop.params
+            if args.ckpt_every and mgr.latest() != args.rounds:
+                # final recovery point (cadence may not divide --rounds)
+                ckpt_fn(loop, args.rounds - 1)
     finally:
         server.stop()
         for p in procs:
@@ -197,6 +288,19 @@ def train_vision(args):
         seed=args.seed, shardings=shardings)
     state = engine.init_state(params, args.clients, strategy,
                               staleness_max=run.staleness_max)
+    mgr = _ckpt_manager(args)
+    meta_extra = {"model": args.model, "dataset": args.dataset,
+                  "compressor": args.compressor, "transport": "inproc"}
+    r0 = 0
+    if args.resume:
+        # the freshly-built state is the structure template: a checkpoint
+        # of a different model/faults/staleness config fails typed here
+        state, _, meta = load_fl_checkpoint(mgr, state)
+        _check_resume_config(meta, run)
+        if shardings is not None:
+            state = shardings.place_state(state)
+        r0 = int(meta["round"])
+        print(f"resuming from {mgr.path(r0)} at round {r0}")
 
     @jax.jit
     def eval_acc(p):
@@ -204,9 +308,10 @@ def train_vision(args):
 
     _write_run_config(args.out, run)
     t0 = time.time()
-    with open(os.path.join(args.out, "metrics.jsonl"), "w") as log:
+    with open(os.path.join(args.out, "metrics.jsonl"),
+              "a" if args.resume else "w") as log:
         def on_eval(st, m, r):
-            rec = {"round": r, "loss": float(m.loss[-1]),
+            rec = {"round": r0 + r, "loss": float(m.loss[-1]),
                    "acc": float(eval_acc(st.params)),
                    "cos": float(np.mean(m.cosine[-1])),
                    "payload_floats": float(m.payload_floats[-1]),
@@ -215,8 +320,15 @@ def train_vision(args):
             log.write(json.dumps(rec) + "\n")
             log.flush()
 
-        state, _ = engine.run(state, args.rounds, eval_every=args.eval_every,
-                              eval_fn=on_eval)
+        def ckpt_fn(st, rnd):
+            save_fl_checkpoint(mgr, rnd, st, run=run, extra=meta_extra)
+
+        state, _ = engine.run(state, args.rounds - r0,
+                              eval_every=args.eval_every, eval_fn=on_eval,
+                              ckpt_every=args.ckpt_every,
+                              ckpt_fn=ckpt_fn if args.ckpt_every else None)
+    if args.ckpt_every and mgr.latest() != args.rounds:
+        save_fl_checkpoint(mgr, args.rounds, state, run=run, extra=meta_extra)
     save_checkpoint(os.path.join(args.out, "final"), state.params,
                     meta={"model": args.model, "dataset": args.dataset,
                           "compressor": args.compressor, "rounds": args.rounds})
@@ -338,6 +450,19 @@ def main(argv=None):
     ap.add_argument("--liveness-timeout-s", type=float, default=5.0,
                     dest="liveness_timeout_s",
                     help="silence window after which a worker counts as dead")
+    # recovery (repro.checkpoint): periodic full-state recovery points +
+    # bitwise resume — both transports
+    ap.add_argument("--ckpt-every", type=int, default=0, dest="ckpt_every",
+                    help="write a durable full-state recovery point every N "
+                         "rounds (params + EF + staleness buffer + round "
+                         "counter + byte ledger) under <out>/ckpt; 0 writes "
+                         "only the final params checkpoint")
+    ap.add_argument("--resume", default=None, metavar="CKPT_ROOT",
+                    help="resume from the latest recovery point under this "
+                         "checkpoint root (e.g. <out>/ckpt); the run must "
+                         "use the same configuration, replays the remaining "
+                         "rounds bitwise, and appends to the existing "
+                         "metrics JSONL")
     ap.add_argument("--out", default="experiments/train_run")
     args = ap.parse_args(argv)
     if args.arch and args.smoke:

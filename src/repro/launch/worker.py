@@ -38,6 +38,14 @@ server has necessarily moved on without this client's frame). MSG_EF_REQ
 dumps the committed residual as a flat f32 leaf stream — the observability
 hook the conservation gates read.
 
+Every commit is also *pushed* to the server (MSG_EF_PUSH, tagged with the
+committed round): the server's EF bank then always holds this client's
+last-committed residual, which is the only state the worker process owns.
+That bank is the recovery source for elastic membership — when this
+process is killed and a replacement connects, the server re-syncs it with
+MSG_EF_SYNC and the residual continues bitwise from where it died
+(``VisionClientCompute.install_ef``).
+
 A non-participating round (ROUND flags bit 0 clear) is sat out entirely:
 no compute, no frame, EF frozen — the ``participate=False`` branch.
 
@@ -60,9 +68,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.transport import (FLAG_PARTICIPATE, MSG_ACK, MSG_EF_DUMP,
-                                  MSG_EF_REQ, MSG_FRAME, MSG_METRIC,
-                                  MSG_RESEND, MSG_ROUND, MSG_SETUP, MSG_STOP,
-                                  ServerLink)
+                                  MSG_EF_PUSH, MSG_EF_REQ, MSG_EF_SYNC,
+                                  MSG_FRAME, MSG_METRIC, MSG_RESEND,
+                                  MSG_ROUND, MSG_SETUP, MSG_STOP, ServerLink)
 
 PyTree = Any
 
@@ -206,11 +214,32 @@ class VisionClientCompute:
 
     def ef_bytes(self) -> bytes:
         """Committed EF residual as the flat f32 leaf stream MSG_EF_DUMP
-        carries (tree_leaves order, matching any host-side flattening of
-        the oracle's EF row)."""
+        and MSG_EF_PUSH carry (tree_leaves order, matching any host-side
+        flattening of the oracle's EF row)."""
         return np.concatenate(
             [np.asarray(l[0], np.float32).ravel()
              for l in jax.tree_util.tree_leaves(self.ef)]).tobytes()
+
+    def install_ef(self, stream: bytes) -> None:
+        """Install a server-synced residual (flat f32 leaf stream, the
+        MSG_EF_SYNC body) — the rejoin path: a restarted worker process
+        lost its residual with its life, and the server's EF bank is the
+        recovery source. Clears any staged round (it predates the sync)."""
+        flat = np.frombuffer(stream, np.float32)
+        leaves, treedef = jax.tree_util.tree_flatten(self.ef)
+        total = sum(int(l.size) for l in leaves)
+        if flat.size != total:
+            raise ValueError(
+                f"EF sync stream carries {flat.size} floats, this client's "
+                f"residual has {total}")
+        out, off = [], 0
+        for l in leaves:
+            n = int(l.size)
+            out.append(jnp.asarray(flat[off:off + n].reshape(l.shape),
+                                   dtype=l.dtype))
+            off += n
+        self.ef = jax.tree_util.tree_unflatten(treedef, out)
+        self._pending = None
 
 
 def build_compute(setup: Dict, client_id: int):
@@ -230,6 +259,18 @@ def _serve(link: ServerLink, compute, client_id: int,
     race."""
     last_frame: Optional[bytes] = None
     last_round = -1
+
+    def commit_and_push(delivered: bool) -> None:
+        # resolve the staged round, then push the committed residual so the
+        # server's EF bank tracks this client's last commit (the rejoin /
+        # resume recovery source)
+        staged = compute.pending_round()
+        if staged is None:
+            return
+        compute.commit(delivered=delivered)
+        link.send(MSG_EF_PUSH,
+                  struct.pack("<I", staged) + compute.ef_bytes())
+
     while True:
         mtype, body = link.recv()
         if mtype == MSG_STOP:
@@ -238,8 +279,7 @@ def _serve(link: ServerLink, compute, client_id: int,
             rnd, flags = struct.unpack_from("<IB", body)
             # a still-staged previous round means the server moved on
             # without acking us — it necessarily gave up on our frame
-            if compute.pending_round() is not None:
-                compute.commit(delivered=False)
+            commit_and_push(delivered=False)
             if not flags & FLAG_PARTICIPATE:
                 last_frame, last_round = None, rnd
                 continue                     # sit the round out; EF frozen
@@ -257,9 +297,13 @@ def _serve(link: ServerLink, compute, client_id: int,
         elif mtype == MSG_ACK:
             rnd, delivered = struct.unpack("<IB", body)
             if compute.pending_round() == rnd:
-                compute.commit(delivered=bool(delivered))
+                commit_and_push(delivered=bool(delivered))
         elif mtype == MSG_EF_REQ:
             link.send(MSG_EF_DUMP, compute.ef_bytes())
+        elif mtype == MSG_EF_SYNC:
+            # server-held residual (rejoin/resume): install and continue
+            # from exactly where the previous incarnation committed
+            compute.install_ef(body[4:])
         # unknown/duplicate control messages are ignored: the server owns
         # the protocol version, the worker just serves what it understands
 

@@ -1,0 +1,285 @@
+"""Durable checkpoints: atomic save/load round-trips over awkward trees,
+typed failure modes, the versioned step index, crash-mid-write survival,
+and the LinkStats ledger snapshot that makes resumed round numbering
+continue where the crashed run stopped.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (MANIFEST_VERSION, CheckpointError,
+                              CheckpointKeyError, CheckpointManager,
+                              CheckpointMissingError, CheckpointShapeError,
+                              CheckpointVersionError, load_arrays,
+                              load_checkpoint, load_fl_checkpoint,
+                              load_manifest, save_checkpoint,
+                              save_fl_checkpoint)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# single-checkpoint round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_nested_tree_roundtrips_bitwise(tmp_path):
+    """Mixed container kinds, ragged shapes, mixed dtypes, 0-d scalars —
+    everything comes back bitwise in the target structure's dtypes."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "w": (jnp.asarray(rng.normal(size=(7, 3)), jnp.float32),
+              jnp.asarray(rng.normal(size=(3,)), jnp.float32)),
+        "counts": [jnp.arange(5, dtype=jnp.int32),
+                   rng.integers(0, 9, size=(2, 2)).astype(np.int64)],
+        "mask": jnp.asarray([True, False, True]),
+        "scalar": jnp.asarray(0.125, jnp.float32),      # 0-d leaf
+        "wide": np.float64(3.0),                        # numpy scalar leaf
+    }
+    p = save_checkpoint(str(tmp_path / "ck"), tree, meta={"round": 7})
+    # numpy zeros keep the f64 leaf's dtype (jnp would truncate under
+    # disabled x64, and a like-tree must carry the target dtypes)
+    like = jax.tree_util.tree_map(lambda l: np.zeros_like(np.asarray(l)), tree)
+    out = load_checkpoint(p, like)
+    assert _tree_equal(tree, out)
+    for got, want in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(like)):
+        assert got.dtype == jnp.result_type(want)
+    assert load_manifest(p)["meta"] == {"round": 7}
+
+
+def test_bf16_leaves_roundtrip_exactly_via_f32_storage(tmp_path):
+    """bf16 has no stable npz representation: leaves are widened to f32
+    (exact — bf16 is a truncated f32) and cast back on load, bit-for-bit."""
+    vals = jnp.asarray([1.0, -2.5, 3.0e-20, 65280.0, 1.0 / 3.0], jnp.bfloat16)
+    tree = {"p": vals}
+    p = save_checkpoint(str(tmp_path / "ck"), tree)
+    flat, manifest = load_arrays(p)
+    assert flat["p"].dtype == np.float32           # storage is f32
+    out = load_checkpoint(p, {"p": jnp.zeros_like(vals)})
+    assert out["p"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["p"], np.float32), np.asarray(vals, np.float32))
+
+
+def test_bare_array_tree_uses_root_key(tmp_path):
+    arr = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    p = save_checkpoint(str(tmp_path / "ck"), arr)
+    flat, _ = load_arrays(p)
+    assert set(flat) == {"_root"}
+    out = load_checkpoint(p, jnp.zeros_like(arr))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(arr))
+
+
+# ---------------------------------------------------------------------------
+# typed failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_missing_checkpoint_is_typed_file_not_found(tmp_path):
+    with pytest.raises(CheckpointMissingError) as ei:
+        load_checkpoint(str(tmp_path / "nope"), {"a": jnp.zeros(2)})
+    assert isinstance(ei.value, FileNotFoundError)
+    assert isinstance(ei.value, CheckpointError)
+
+
+def test_missing_leaf_is_typed_key_error(tmp_path):
+    p = save_checkpoint(str(tmp_path / "ck"), {"a": jnp.zeros(2)})
+    with pytest.raises(CheckpointKeyError) as ei:
+        load_checkpoint(p, {"a": jnp.zeros(2), "b": jnp.zeros(3)})
+    assert isinstance(ei.value, KeyError)
+
+
+def test_shape_and_dtype_mismatch_are_typed_value_errors(tmp_path):
+    p = save_checkpoint(str(tmp_path / "ck"),
+                        {"a": jnp.zeros((2, 3), jnp.float32)})
+    with pytest.raises(CheckpointShapeError):
+        load_checkpoint(p, {"a": jnp.zeros((3, 2), jnp.float32)})
+    with pytest.raises(CheckpointShapeError) as ei:
+        load_checkpoint(p, {"a": jnp.zeros((2, 3), jnp.int32)})
+    assert isinstance(ei.value, ValueError)
+
+
+def test_future_manifest_version_is_rejected(tmp_path):
+    p = save_checkpoint(str(tmp_path / "ck"), {"a": jnp.zeros(2)})
+    mpath = os.path.join(p, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["version"] = MANIFEST_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(CheckpointVersionError):
+        load_checkpoint(p, {"a": jnp.zeros(2)})
+
+
+def test_future_index_version_is_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    mgr.save(1, {"a": jnp.zeros(2)})
+    ipath = os.path.join(mgr.root, "MANIFEST.json")
+    with open(ipath) as f:
+        idx = json.load(f)
+    idx["version"] = MANIFEST_VERSION + 1
+    with open(ipath, "w") as f:
+        json.dump(idx, f)
+    with pytest.raises(CheckpointVersionError):
+        mgr.latest()
+
+
+def test_corrupt_manifest_json_is_missing_not_crash(tmp_path):
+    p = save_checkpoint(str(tmp_path / "ck"), {"a": jnp.zeros(2)})
+    with open(os.path.join(p, "manifest.json"), "w") as f:
+        f.write('{"version": 1, "leaves"')       # truncated write w/o rename
+    with pytest.raises(CheckpointMissingError):
+        load_checkpoint(p, {"a": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# versioned step index: retention, commit point, crash-mid-write
+# ---------------------------------------------------------------------------
+
+
+def test_manager_retention_prunes_oldest_after_commit(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "root"), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"a": jnp.full((3,), float(s))})
+    assert mgr.steps() == [3, 4] and mgr.latest() == 4
+    assert not os.path.exists(mgr.path(1))
+    assert not os.path.exists(mgr.path(2))
+    tree, _ = mgr.load({"a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.full((3,), 4.0))
+    tree, _ = mgr.load({"a": jnp.zeros(3)}, step=3)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.full((3,), 3.0))
+
+
+def test_crash_mid_payload_write_leaves_previous_loadable(tmp_path):
+    """A kill while step 4's payload was being written (dir + arrays.npz,
+    no manifest, no index entry) must leave latest() naming step 2 — and a
+    retried save over the debris must succeed."""
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    mgr.save(2, {"a": jnp.full((3,), 2.0)}, meta={"round": 2})
+    debris = mgr.path(4)
+    os.makedirs(debris)
+    with open(os.path.join(debris, "arrays.npz"), "wb") as f:
+        f.write(b"PK\x03\x04 partial zip the crash truncated")
+    assert mgr.latest() == 2
+    tree, meta = mgr.load({"a": jnp.zeros(3)})
+    assert meta["round"] == 2
+    with pytest.raises(CheckpointMissingError):
+        mgr.load({"a": jnp.zeros(3)}, step=4)    # never committed
+    mgr.save(4, {"a": jnp.full((3,), 4.0)}, meta={"round": 4})
+    assert mgr.latest() == 4
+    tree, _ = mgr.load({"a": jnp.zeros(3)}, step=4)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.full((3,), 4.0))
+
+
+def test_crash_before_index_commit_leaves_step_invisible(tmp_path):
+    """A fully-written step directory whose index rename never happened is
+    not a committed checkpoint: latest() ignores it."""
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    mgr.save(2, {"a": jnp.full((3,), 2.0)})
+    save_checkpoint(mgr.path(6), {"a": jnp.full((3,), 6.0)})  # no index write
+    assert mgr.latest() == 2 and mgr.steps() == [2]
+    with pytest.raises(CheckpointMissingError):
+        mgr.load({"a": jnp.zeros(3)}, step=6)
+
+
+def test_stray_index_tmp_is_ignored(tmp_path):
+    """A crash between tmp write and rename leaves MANIFEST.json.tmp lying
+    around; the committed index is untouched."""
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    mgr.save(2, {"a": jnp.zeros(3)})
+    with open(os.path.join(mgr.root, "MANIFEST.json.tmp"), "w") as f:
+        f.write('{"version": 1, "steps": [2, 9')
+    assert mgr.latest() == 2
+
+
+def test_empty_manager_raises_missing(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    assert mgr.latest() is None and mgr.steps() == []
+    with pytest.raises(CheckpointMissingError):
+        mgr.load({"a": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# full-FLState recovery points
+# ---------------------------------------------------------------------------
+
+
+def _fl_state(staleness_max: int):
+    from repro.fl.round import fl_init
+
+    params = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(4, 2)),
+                               jnp.float32),
+              "b": jnp.zeros((2,), jnp.float32)}
+    state = fl_init(params, 3, None, staleness_max=staleness_max)
+    # make every component non-trivial so bitwise equality means something
+    bump = jax.tree_util.tree_map(
+        lambda l: l + jnp.arange(l.size, dtype=l.dtype).reshape(l.shape)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, state)
+    return bump._replace(round=jnp.asarray(5, state.round.dtype))
+
+
+@pytest.mark.parametrize("staleness_max", [0, 2])
+def test_fl_checkpoint_roundtrips_state_bank_and_meta(tmp_path, staleness_max):
+    state = _fl_state(staleness_max)
+    bank = {0: (5, np.arange(10, dtype=np.float32)),
+            2: (4, np.linspace(-1, 1, 10).astype(np.float32))}
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    save_fl_checkpoint(mgr, 5, state, ledger={"uplink": {"total_bytes": 123}},
+                       history=[{"round": 4, "delivered": [True, False, True]}],
+                       ef_bank=bank, extra={"transport": "socket"})
+    like = jax.tree_util.tree_map(jnp.zeros_like, state)
+    got, got_bank, meta = load_fl_checkpoint(mgr, like)
+    assert _tree_equal(state, got)
+    assert int(got.round) == 5
+    assert set(got_bank) == {0, 2}
+    for cid in bank:
+        assert got_bank[cid][0] == bank[cid][0]
+        np.testing.assert_array_equal(got_bank[cid][1], bank[cid][1])
+    assert meta["round"] == 5 and meta["transport"] == "socket"
+    assert meta["ledger"]["uplink"]["total_bytes"] == 123
+    assert meta["history"][0]["delivered"] == [True, False, True]
+
+
+def test_fl_checkpoint_structure_mismatch_is_typed(tmp_path):
+    """A buffer-less checkpoint refuses to load into a state that expects
+    the staleness ring buffer — typed error, not garbage buffers."""
+    mgr = CheckpointManager(str(tmp_path / "root"))
+    save_fl_checkpoint(mgr, 5, _fl_state(0))
+    like = jax.tree_util.tree_map(jnp.zeros_like, _fl_state(2))
+    with pytest.raises(CheckpointError):
+        load_fl_checkpoint(mgr, like)
+
+
+# ---------------------------------------------------------------------------
+# ledger snapshot/restore: resumed round numbering
+# ---------------------------------------------------------------------------
+
+
+def test_channel_ledger_restore_resumes_round_numbering():
+    from repro.comm.channel import InProcessChannel
+
+    ch = InProcessChannel()
+    for _ in range(3):
+        ch.begin_round()
+        ch.send_up(np.zeros((17,), np.uint8))
+        ch.send_down(np.zeros((5,), np.uint8))
+    led = ch.ledger()
+    assert led["uplink"]["per_round"] == [17, 17, 17]
+    assert led["uplink"]["total_bytes"] == 51 and led["uplink"]["messages"] == 3
+
+    fresh = InProcessChannel()
+    fresh.restore_ledger(json.loads(json.dumps(led)))   # via JSON, like a ckpt
+    assert fresh.begin_round() == 3                     # continues, not resets
+    fresh.send_up(np.zeros((17,), np.uint8))
+    assert fresh.uplink.per_round == [17, 17, 17, 17]
+    assert fresh.uplink.total_bytes == 68
+    assert fresh.downlink.per_round == [5, 5, 5, 0]

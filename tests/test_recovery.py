@@ -1,0 +1,217 @@
+"""Crash-safe recovery: bitwise resume of the in-process engine from a
+mid-run recovery point, the absolute-round checkpoint cadence, and — over
+real sockets — a SIGKILLed worker rejoining with its EF residual re-synced
+from the server's bank.
+
+The bitwise-resume property rests on the engine's fold_in PRNG contract:
+every round is a pure function of (seed, fault_seed, FLState.round), so
+restoring the state tree IS restoring the trajectory — block grouping
+around the checkpoint boundary is irrelevant.
+"""
+import signal
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_fl_checkpoint,
+                              save_fl_checkpoint)
+from repro.configs.base import CompressorConfig, FLConfig
+from repro.configs.run import RunConfig
+
+
+def _faulted_problem(num_clients=4):
+    """Tiny faulted vision problem: drops + stragglers + staleness buffer,
+    so a recovery point must carry every piece of mutable round state."""
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_class_image_dataset
+    from repro.fl.engine import RoundEngine, device_pools, vision_batcher
+    from repro.fl.round import build_fl_round
+    from repro.models.build import vision_syn_spec
+    from repro.models.cnn import VisionSpec, make_paper_model
+
+    spec = VisionSpec("tiny", (6, 6, 1), 3)
+    comp = CompressorConfig(kind="stc", keep_ratio=0.1)
+    fl = FLConfig(num_clients=num_clients, local_steps=2, local_lr=0.05,
+                  local_batch=4, compressor=comp, seed=0)
+    run = RunConfig(fl=fl, drop_rate=0.3, straggler_rate=0.25,
+                    staleness_max=2, fault_seed=7)
+    model = make_paper_model("mlp", spec)
+    params = model.init(jax.random.PRNGKey(fl.seed))
+    from repro.core.strategy import make_strategy
+    strategy = make_strategy(comp, loss_fn=model.syn_loss,
+                             syn_spec=vision_syn_spec(spec, comp),
+                             local_lr=fl.local_lr)
+    train = make_class_image_dataset(jax.random.PRNGKey(fl.seed), 120,
+                                     spec.input_shape, spec.num_classes)
+    parts = dirichlet_partition(train.y, num_clients, alpha=fl.dirichlet_alpha,
+                                seed=fl.seed, min_per_client=fl.local_batch)
+    pools = device_pools(parts)
+
+    def make_engine():
+        return RoundEngine(
+            build_fl_round(model.loss, strategy, run),
+            vision_batcher(train.x, train.y, pools, fl.local_steps,
+                           fl.local_batch),
+            seed=fl.seed)
+
+    return make_engine, params, strategy, run
+
+
+def _state_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def test_inproc_resume_is_bitwise_equal_to_uninterrupted_run(tmp_path):
+    """Oracle: 8 straight faulted rounds. Recovery path: checkpoint every 2
+    rounds (eval every 3 — deliberately coprime cadences), load the step-4
+    recovery point into a FRESH engine, run the remaining 4 rounds. Params,
+    per-client EF, staleness ring buffer, and round counter must all be
+    bitwise identical."""
+    make_engine, params, strategy, run = _faulted_problem()
+    N, R, CUT = run.fl.num_clients, 8, 4
+
+    oracle = make_engine()
+    st = oracle.init_state(params, N, strategy, staleness_max=run.staleness_max)
+    oracle_final, _ = oracle.run(st, R)
+
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    eng = make_engine()
+    st = eng.init_state(params, N, strategy, staleness_max=run.staleness_max)
+    eng.run(st, CUT + 1, eval_every=3, ckpt_every=2,
+            ckpt_fn=lambda s, r: save_fl_checkpoint(mgr, r, s, run=run))
+    assert mgr.steps() == [2, 4]                # absolute-round cadence
+
+    # fresh engine + fresh template state: the checkpoint is the only thing
+    # carried across the "process boundary"
+    resumed = make_engine()
+    template = resumed.init_state(params, N, strategy,
+                                  staleness_max=run.staleness_max)
+    state, _, meta = load_fl_checkpoint(mgr, template, step=CUT)
+    assert meta["round"] == CUT and int(state.round) == CUT
+    assert meta["run"] == run.to_json()
+    resumed_final, _ = resumed.run(state, R - CUT)
+
+    assert int(resumed_final.round) == int(oracle_final.round) == R
+    assert _state_equal(oracle_final, resumed_final)
+
+
+def test_ckpt_hook_fires_on_absolute_round_boundaries(tmp_path):
+    """ckpt_every anchors on FLState.round, not rounds-run-this-call: a
+    state resumed at round 4 checkpoints at 6 and 8, exactly where the
+    uninterrupted run does — and eval boundaries still fire relative."""
+    make_engine, params, strategy, run = _faulted_problem()
+    N = run.fl.num_clients
+    fired = []
+    eng = make_engine()
+    st = eng.init_state(params, N, strategy, staleness_max=run.staleness_max)
+    st, hist = eng.run(st, 8, eval_every=3, eval_fn=lambda s, m, r: r,
+                       ckpt_every=2, ckpt_fn=lambda s, r: fired.append(r))
+    assert fired == [2, 4, 6, 8]
+    assert [r for r, _ in hist.evals] == [3, 6, 8]
+
+    # second leg of a resumed run: absolute rounds continue
+    fired2 = []
+    st, _ = eng.run(st, 5, ckpt_every=4, ckpt_fn=lambda s, r: fired2.append(r))
+    assert fired2 == [12] and int(st.round) == 13
+
+
+def test_run_config_ckpt_every_roundtrips_and_validates():
+    run = RunConfig(fl=FLConfig(num_clients=2), ckpt_every=5)
+    assert RunConfig.from_json(run.to_json()).ckpt_every == 5
+    # older checkpoints have no ckpt_every key: default 0
+    d = run.to_json()
+    d.pop("ckpt_every")
+    assert RunConfig.from_json(d).ckpt_every == 0
+    with pytest.raises(ValueError):
+        RunConfig(fl=FLConfig(num_clients=2), ckpt_every=-1)
+
+
+# ---------------------------------------------------------------------------
+# live sockets: SIGKILLed worker rejoins with its banked EF residual
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.transport(timeout=480)
+def test_killed_worker_rejoins_with_banked_ef_resynced():
+    """SIGKILL a worker mid-run, drive rounds without it (delivered=False —
+    its residual is frozen server-side), restart its process, and require:
+    the rejoiner's installed EF is bitwise the banked commit, it re-enters
+    delivery, and the missed rounds were recorded undelivered."""
+    from repro.comm.transport import SocketServer, spawn_local_workers
+    from repro.core.strategy import make_strategy
+    from repro.fl.engine import LiveRoundLoop, RetryPolicy
+    from repro.launch.worker import vision_setup
+    from repro.models.build import vision_syn_spec
+    from repro.models.cnn import VisionSpec, make_paper_model
+
+    N, KILL = 2, 1
+    spec = VisionSpec("tiny", (6, 6, 1), 3)
+    comp = CompressorConfig(kind="stc", keep_ratio=0.1)
+    fl = FLConfig(num_clients=N, local_steps=2, local_lr=0.05,
+                  local_batch=4, compressor=comp, seed=0)
+    run = RunConfig(fl=fl, wire="codec", transport="socket",
+                    round_deadline_s=60.0, recv_timeout_s=30.0,
+                    transport_retries=0, heartbeat_s=0.2,
+                    liveness_timeout_s=5.0)
+    model = make_paper_model("mlp", spec)
+    params = model.init(jax.random.PRNGKey(fl.seed))
+    strategy = make_strategy(comp, loss_fn=model.syn_loss,
+                             syn_spec=vision_syn_spec(spec, comp),
+                             local_lr=fl.local_lr)
+    codec = strategy.wire_codec(params, policy=run.wire_policy)
+
+    warm = RetryPolicy(max_retries=0, recv_timeout_s=240.0,
+                       max_timeout_s=240.0)
+    server = SocketServer(N, heartbeat_s=run.heartbeat_s,
+                          liveness_timeout_s=run.liveness_timeout_s)
+    procs = spawn_local_workers(server.address, range(N))
+    rejoin_procs = []
+    try:
+        server.wait_ready(60)
+        server.send_setup(vision_setup(run, model="mlp", spec=spec,
+                                       train_size=96))
+        loop = LiveRoundLoop(server, strategy, codec, run, params)
+        loop.run(2, deadline_s=240.0, policy=warm)      # 0 = jit warm-up
+        assert server.wait_ef_bank(1, range(N), timeout=30.0)
+        banked = server.ef_bank()                        # post-round-1 commits
+
+        procs[KILL].send_signal(signal.SIGKILL)
+        procs[KILL].wait()
+        deadline = time.monotonic() + 20
+        while KILL in server.live_workers():
+            assert time.monotonic() < deadline, "server never noticed death"
+            time.sleep(0.05)
+        loop.run(2)                                      # rounds 2-3 without it
+
+        rejoin_procs = spawn_local_workers(server.address, [KILL])
+        deadline = time.monotonic() + 60
+        while KILL not in server.live_workers():
+            assert time.monotonic() < deadline, "rejoiner never connected"
+            time.sleep(0.05)
+        # EF conservation across the outage: the rejoiner was re-synced to
+        # the exact round-1 commit (its missed rounds were delivered=False,
+        # so the residual is unchanged — atol=0)
+        ef = server.request_ef(KILL, timeout=60)
+        assert ef is not None
+        np.testing.assert_array_equal(ef, banked[KILL][1])
+
+        # the rejoiner's first round recompiles: generous window again
+        loop.run(1, deadline_s=240.0, policy=warm)
+    finally:
+        server.stop()
+        for p in list(procs) + list(rejoin_procs):
+            try:
+                p.wait(timeout=15)
+            except Exception:
+                p.kill()
+
+    recs = {r["round"]: r for r in loop.history}
+    assert recs[1]["delivered"].all()                    # pre-kill: healthy
+    assert not recs[2]["delivered"][KILL] and KILL in recs[2]["dead"]
+    assert not recs[3]["delivered"][KILL] and KILL in recs[3]["dead"]
+    assert recs[4]["delivered"].all()                    # rejoined + delivering
+    assert KILL not in recs[4]["dead"]
