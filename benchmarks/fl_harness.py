@@ -58,6 +58,12 @@ class ExperimentResult:
     # the honest uplink bill vs the paper's convention.
     wire_bytes: Optional[float] = None
     comp_rate_bytes: Optional[float] = None
+    # control-plane bytes (headers, acks, heartbeats, metric frames) billed
+    # by a live transport's ledger — the part of the bill LinkStats data
+    # buckets deliberately exclude. None for in-process runs (no control
+    # plane); a socket run fills both via ``from_live_run``.
+    overhead_up_bytes: Optional[float] = None
+    overhead_down_bytes: Optional[float] = None
 
     @property
     def final_acc(self) -> float:
@@ -66,6 +72,28 @@ class ExperimentResult:
     @property
     def comp_ratio(self) -> float:
         return 1.0 / self.comp_rate if self.comp_rate else float("inf")
+
+    @classmethod
+    def from_live_run(cls, name: str, history: Sequence[dict], ledger: dict,
+                      *, payload_floats: float, model_params: int,
+                      seconds: float,
+                      acc_curve: Sequence[float] = ()) -> "ExperimentResult":
+        """Build a result from a ``LiveRoundLoop`` run: loss curve from the
+        per-round worker-reported losses, byte columns from the transport's
+        ledger — including the control-plane overhead the in-process path
+        never has."""
+        losses = [float(np.mean(list(rec["losses"].values())))
+                  for rec in history if rec["losses"]]
+        rounds = max(len(history), 1)
+        return cls(
+            name=name, acc_curve=list(acc_curve), loss_curve=losses,
+            cosine_curve=[], payload_floats=float(payload_floats),
+            model_params=int(model_params),
+            comp_rate=float(payload_floats) / max(model_params, 1),
+            seconds=float(seconds),
+            wire_bytes=ledger["uplink"]["total_bytes"] / rounds,
+            overhead_up_bytes=float(ledger.get("overhead_up", 0)),
+            overhead_down_bytes=float(ledger.get("overhead_down", 0)))
 
 
 def run_fl(

@@ -16,9 +16,10 @@ import time
 
 from benchmarks import (bench_collectives, bench_faults, bench_fedsynth,
                         bench_fig1, bench_fig7, bench_kernels,
-                        bench_recovery, bench_round_engine, bench_ssweep,
-                        bench_table2, bench_table3, bench_table4,
-                        bench_transport, bench_wire)
+                        bench_observability, bench_recovery,
+                        bench_round_engine, bench_ssweep, bench_table2,
+                        bench_table3, bench_table4, bench_transport,
+                        bench_wire)
 
 BENCHES = {
     "fig1": bench_fig1.run,          # convergence vs rate
@@ -35,6 +36,7 @@ BENCHES = {
     "faults": bench_faults.run,              # dropout/staleness degradation
     "transport": bench_transport.run,        # live socket rounds vs oracle
     "recovery": bench_recovery.run,          # chaos-kill: resume + rejoin
+    "observability": bench_observability.run,  # trace overhead + completeness
 }
 
 

@@ -37,6 +37,15 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
   uplink bytes vs HEAD (tiny or mlp scenario), or any ``pass_*`` gate
   flipping false.
 
+* ``BENCH_observability.json``: the tracing-overhead gate false (traced
+  driver throughput below 97% of untraced — telemetry that distorts what
+  it measures), the complete-trace gate false (an executed round missing
+  from the merged trace, a phase missing from a round, a straggler or
+  eaten frame mis-attributed), or the bytes-parity gate false (trace-
+  summed frame bytes != ledger-billed bytes — all fresh-run absolute), a
+  drop in the traced-throughput ratio beyond the tolerance vs HEAD, or
+  any ``pass_*`` gate flipping false.
+
 * ``BENCH_recovery.json``: the bitwise-resume, rejoin-EF-conservation, or
   previous-checkpoint-survives gate false (all fresh-run absolute — a
   resume that diverges from the uninterrupted run, a rejoiner whose
@@ -271,6 +280,30 @@ def check_recovery(fresh, base, tol):
     return probs
 
 
+def check_observability(fresh, base, tol):
+    probs = []
+    # absolute: telemetry correctness properties — cheap-when-on, complete,
+    # and byte-exact — fail even in the commit introducing the bench
+    for flag, why in (
+            ("pass_overhead", "tracing-on driver throughput fell below 97% "
+             "of tracing-off (instrumentation distorts the hot path)"),
+            ("pass_complete_trace", "merged trace missing rounds/phases or "
+             "mis-attributing the straggler / eaten frame"),
+            ("pass_bytes_parity", "trace-summed frame bytes != ledger-billed "
+             "bytes (the trace is no longer a complete record of the wire)")):
+        if _get(fresh, flag) is False:
+            probs.append(f"{flag} is false: {why}")
+    # vs HEAD: the traced/untraced throughput ratio must not sag
+    f_r = _get(fresh, "overhead.traced_throughput_ratio")
+    b_r = _get(base, "overhead.traced_throughput_ratio")
+    if f_r is not None and b_r is not None and f_r < (1 - tol) * b_r:
+        probs.append(f"traced-throughput ratio dropped >{tol:.0%}: "
+                     f"{b_r:.3f} -> {f_r:.3f}")
+    if _get(base, "pass") and not _get(fresh, "pass"):
+        probs.append("pass gate flipped to false")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
@@ -279,6 +312,7 @@ CHECKS = {
     "BENCH_faults.json": check_faults,
     "BENCH_transport.json": check_transport,
     "BENCH_recovery.json": check_recovery,
+    "BENCH_observability.json": check_observability,
 }
 
 

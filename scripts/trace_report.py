@@ -1,0 +1,314 @@
+#!/usr/bin/env python
+"""Analyze a repro.obs round trace: phase latency quantiles, byte
+reconciliation against the transport ledger, straggler / dead-worker
+attribution, and a ``--replay`` summary shaped as input for the
+trace-driven round simulator (ROADMAP million-client item).
+
+    PYTHONPATH=src python scripts/trace_report.py <out>/trace.jsonl \
+        [--ledger <ledger.json>] [--replay replay.json] [--json]
+
+Input is the merged JSONL trace ``launch/train.py --trace`` writes (worker
+spans already shifted onto the server clock). The ledger file is a
+``Channel.ledger()`` dict (uplink/downlink LinkStats snapshots + overhead
+counters); with it, the report checks that the bytes the trace saw are
+EXACTLY the bytes the ledger billed — the reconciliation the observability
+bench gates on.
+
+How to read a straggle: the server's ``round.collect`` span ends at the
+deadline with ``delivered < expected``; the missing client's ``round.outcome``
+event says ``undelivered`` (not ``dead`` — its heartbeats kept arriving);
+and that client's own ``worker.compute``/``worker.straggle`` spans overrun
+the server's deadline window. ``attribute()`` automates exactly that
+cross-check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+# server-side phases every executed round must show (the completeness gate)
+ROUND_PHASES = ("round.encode", "round.broadcast", "round.collect",
+                "round.ack", "round.aggregate")
+
+
+def load_records(path: str) -> List[Dict[str, Any]]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def _quantile(sorted_vals: List[float], q: float) -> Optional[float]:
+    if not sorted_vals:
+        return None
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(q * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+def phase_quantiles(records: List[Dict[str, Any]]) -> Dict[str, Dict]:
+    """Per span-name duration stats (seconds): count/p50/p95/p99/max/total."""
+    durs: Dict[str, List[float]] = defaultdict(list)
+    for r in records:
+        if r.get("kind") == "span" and r.get("t1") is not None:
+            durs[r["name"]].append((int(r["t1"]) - int(r["t0"])) / 1e9)
+    out = {}
+    for name, vals in sorted(durs.items()):
+        vals.sort()
+        out[name] = {"count": len(vals), "p50": _quantile(vals, 0.50),
+                     "p95": _quantile(vals, 0.95), "p99": _quantile(vals, 0.99),
+                     "max": vals[-1], "total": sum(vals)}
+    return out
+
+
+def rounds_in_trace(records: List[Dict[str, Any]]) -> List[int]:
+    return sorted({int(r["round"]) for r in records
+                   if r.get("name") == "round" and r.get("kind") == "span"})
+
+
+def phase_completeness(records: List[Dict[str, Any]]) -> Dict[int, List[str]]:
+    """round -> list of missing server phases (empty list == complete)."""
+    seen: Dict[int, set] = defaultdict(set)
+    for r in records:
+        if r.get("kind") == "span" and r.get("name") in ROUND_PHASES:
+            seen[int(r["round"])].add(r["name"])
+    return {rnd: [p for p in ROUND_PHASES if p not in seen[rnd]]
+            for rnd in rounds_in_trace(records)}
+
+
+def trace_bytes(records: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Sum the data-frame bytes the trace saw, per direction and per round.
+
+    Every transport ``LinkStats._record`` emits exactly one rx_frame /
+    tx_frame event carrying the billed byte count (including re-sends,
+    filtered and stale frames — the bytes crossed the wire), so these sums
+    must equal the ledger's ``total_bytes`` exactly."""
+    up_total = down_total = 0
+    up_rounds: Dict[int, int] = defaultdict(int)
+    down_rounds: Dict[int, int] = defaultdict(int)
+    for r in records:
+        if r.get("name") == "rx_frame":
+            up_total += int(r["bytes"])
+            up_rounds[int(r["round"])] += int(r["bytes"])
+        elif r.get("name") == "tx_frame":
+            down_total += int(r["bytes"])
+            down_rounds[int(r["round"])] += int(r["bytes"])
+    return {"uplink_bytes": up_total, "downlink_bytes": down_total,
+            "uplink_per_round": dict(up_rounds),
+            "downlink_per_round": dict(down_rounds)}
+
+
+def reconcile(records: List[Dict[str, Any]],
+              ledger: Dict[str, Any]) -> Dict[str, Any]:
+    """Trace-summed frame bytes vs the ledger's billed bytes (exact)."""
+    tb = trace_bytes(records)
+    up_billed = int(ledger["uplink"]["total_bytes"])
+    down_billed = int(ledger["downlink"]["total_bytes"])
+    return {"uplink_trace": tb["uplink_bytes"], "uplink_billed": up_billed,
+            "uplink_exact": tb["uplink_bytes"] == up_billed,
+            "downlink_trace": tb["downlink_bytes"],
+            "downlink_billed": down_billed,
+            "downlink_exact": tb["downlink_bytes"] == down_billed,
+            "overhead_up": int(ledger.get("overhead_up", 0)),
+            "overhead_down": int(ledger.get("overhead_down", 0))}
+
+
+def attribute(records: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Explain every non-delivery: who straggled, whose frame the wire ate,
+    who was dead — from the outcome tags plus the worker-side timeline."""
+    # (round, client) -> outcome from the server's round.outcome events
+    outcomes: Dict[tuple, str] = {}
+    deadlines: Dict[int, float] = {}
+    for r in records:
+        if r.get("name") == "round.outcome":
+            outcomes[(int(r["round"]), int(r["client"]))] = r["outcome"]
+        elif r.get("name") == "round" and r.get("kind") == "span":
+            if r.get("deadline_s") is not None:
+                deadlines[int(r["round"])] = float(r["deadline_s"])
+    # (round, client) -> worker-side busy seconds (decode+compute+straggle)
+    worker_busy: Dict[tuple, float] = defaultdict(float)
+    straggled: set = set()
+    for r in records:
+        if r.get("kind") != "span" or r.get("t1") is None:
+            continue
+        if r.get("name") in ("worker.decode", "worker.compute",
+                             "worker.straggle"):
+            k = (int(r["round"]), int(str(r["proc"]).rsplit("-", 1)[-1]))
+            worker_busy[k] += (int(r["t1"]) - int(r["t0"])) / 1e9
+            if r["name"] == "worker.straggle":
+                straggled.add(k)
+    # frames the injection seam / wire ate or corrupted
+    lost_frames: set = set()
+    for r in records:
+        if r.get("name") == "rx_frame" and r.get("outcome") in ("filtered",
+                                                                "corrupt"):
+            lost_frames.add((int(r["round"]), int(r["client"])))
+
+    causes: List[Dict[str, Any]] = []
+    stragglers: Dict[int, List[int]] = defaultdict(list)
+    dead: Dict[int, List[int]] = defaultdict(list)
+    dropped: Dict[int, List[int]] = defaultdict(list)
+    for (rnd, cid), outcome in sorted(outcomes.items()):
+        if outcome == "delivered" or outcome == "sat_out":
+            continue
+        if outcome == "dead":
+            cause = "dead"
+            dead[cid].append(rnd)
+        elif (rnd, cid) in straggled or worker_busy.get(
+                (rnd, cid), 0.0) > deadlines.get(rnd, float("inf")):
+            cause = "straggler"
+            stragglers[cid].append(rnd)
+        elif (rnd, cid) in lost_frames:
+            cause = "frame_lost"
+            dropped[cid].append(rnd)
+        else:
+            cause = "unknown"
+        causes.append({"round": rnd, "client": cid, "outcome": outcome,
+                       "cause": cause,
+                       "worker_busy_s": round(worker_busy.get((rnd, cid),
+                                                              0.0), 4),
+                       "deadline_s": deadlines.get(rnd)})
+    return {"undelivered": causes,
+            "stragglers": {c: sorted(rs) for c, rs in stragglers.items()},
+            "dead_workers": {c: sorted(rs) for c, rs in dead.items()},
+            "frame_lost": {c: sorted(rs) for c, rs in dropped.items()}}
+
+
+def replay_summary(records: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Per-round client availability/latency profile — the input shape for
+    the trace-driven round simulator: for each round, when each client's
+    frame arrived relative to the broadcast, and how it resolved."""
+    round_spans = {int(r["round"]): r for r in records
+                   if r.get("name") == "round" and r.get("kind") == "span"}
+    arrivals: Dict[tuple, float] = {}
+    for r in records:
+        if r.get("name") == "rx_frame" and r.get("outcome") == "ok":
+            rnd = int(r["round"])
+            base = round_spans.get(rnd)
+            if base is not None:
+                arrivals[(rnd, int(r["client"]))] = \
+                    (int(r["t"]) - int(base["t0"])) / 1e9
+    outcomes: Dict[tuple, str] = {
+        (int(r["round"]), int(r["client"])): r["outcome"]
+        for r in records if r.get("name") == "round.outcome"}
+    tb = trace_bytes(records)
+    rounds = []
+    for rnd, span in sorted(round_spans.items()):
+        clients = sorted({c for (rr, c) in outcomes if rr == rnd})
+        rounds.append({
+            "round": rnd,
+            "wall_s": (int(span["t1"]) - int(span["t0"])) / 1e9
+            if span.get("t1") is not None else None,
+            "deadline_s": span.get("deadline_s"),
+            "bytes_up": tb["uplink_per_round"].get(rnd, 0),
+            "bytes_down": tb["downlink_per_round"].get(rnd, 0),
+            "clients": {str(c): {
+                "outcome": outcomes.get((rnd, c)),
+                "arrival_s": round(arrivals[(rnd, c)], 6)
+                if (rnd, c) in arrivals else None,
+            } for c in clients},
+        })
+    return {"schema": "repro.trace-replay/v1", "rounds": rounds}
+
+
+def report(records: List[Dict[str, Any]],
+           ledger: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The full analysis dict (what ``--json`` prints)."""
+    missing = phase_completeness(records)
+    out = {
+        "rounds": rounds_in_trace(records),
+        "phases": phase_quantiles(records),
+        "phase_complete": all(not m for m in missing.values()),
+        "missing_phases": {str(r): m for r, m in missing.items() if m},
+        "bytes": trace_bytes(records),
+        "attribution": attribute(records),
+    }
+    if ledger is not None:
+        out["reconciliation"] = reconcile(records, ledger)
+    return out
+
+
+def _fmt_s(v: Optional[float]) -> str:
+    return "-" if v is None else f"{v * 1e3:9.3f}ms"
+
+
+def print_report(rep: Dict[str, Any]) -> None:
+    rounds = rep["rounds"]
+    print(f"rounds in trace: {len(rounds)} "
+          f"({rounds[0]}..{rounds[-1]})" if rounds else "rounds in trace: 0")
+    print(f"phase set complete: {rep['phase_complete']}")
+    for rnd, m in rep["missing_phases"].items():
+        print(f"  round {rnd} missing: {', '.join(m)}")
+    print("\nper-phase latency (s):")
+    print(f"  {'phase':<18} {'count':>5} {'p50':>11} {'p95':>11} "
+          f"{'p99':>11} {'max':>11}")
+    for name, st in rep["phases"].items():
+        print(f"  {name:<18} {st['count']:>5} {_fmt_s(st['p50'])} "
+              f"{_fmt_s(st['p95'])} {_fmt_s(st['p99'])} {_fmt_s(st['max'])}")
+    b = rep["bytes"]
+    print(f"\nbytes seen by trace: uplink={b['uplink_bytes']} "
+          f"downlink={b['downlink_bytes']}")
+    rec = rep.get("reconciliation")
+    if rec is not None:
+        print(f"ledger reconciliation: uplink {rec['uplink_trace']} vs "
+              f"billed {rec['uplink_billed']} "
+              f"({'EXACT' if rec['uplink_exact'] else 'MISMATCH'}); "
+              f"downlink {rec['downlink_trace']} vs "
+              f"billed {rec['downlink_billed']} "
+              f"({'EXACT' if rec['downlink_exact'] else 'MISMATCH'})")
+        print(f"control-plane overhead: up={rec['overhead_up']} "
+              f"down={rec['overhead_down']}")
+    att = rep["attribution"]
+    if att["stragglers"]:
+        for cid, rs in att["stragglers"].items():
+            print(f"straggler: client {cid} (rounds {rs})")
+    if att["dead_workers"]:
+        for cid, rs in att["dead_workers"].items():
+            print(f"dead worker: client {cid} (rounds {rs})")
+    if att["frame_lost"]:
+        for cid, rs in att["frame_lost"].items():
+            print(f"frame lost/corrupt: client {cid} (rounds {rs})")
+    if not (att["stragglers"] or att["dead_workers"] or att["frame_lost"]):
+        print("no undelivered frames to attribute")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="analyze a repro.obs round trace")
+    ap.add_argument("trace", help="trace.jsonl from launch/train.py --trace")
+    ap.add_argument("--ledger", default=None,
+                    help="Channel.ledger() JSON to reconcile bytes against")
+    ap.add_argument("--replay", default=None, metavar="OUT",
+                    help="write the trace-driven-simulator replay summary "
+                         "to this JSON file")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full analysis as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    records = load_records(args.trace)
+    ledger = None
+    if args.ledger:
+        with open(args.ledger) as f:
+            ledger = json.load(f)
+    rep = report(records, ledger)
+    if args.replay:
+        with open(args.replay, "w") as f:
+            json.dump(replay_summary(records), f, indent=1)
+        rep["replay_written"] = args.replay
+    if args.json:
+        print(json.dumps(rep, indent=1))
+    else:
+        print_report(rep)
+        if args.replay:
+            print(f"replay summary -> {args.replay}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

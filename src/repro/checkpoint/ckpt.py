@@ -47,6 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import get_tracer
+
 PyTree = Any
 
 MANIFEST_VERSION = 1
@@ -132,13 +134,17 @@ def _fsync_dir(dirname: str) -> None:
 def _atomic_write(path: str, data: bytes) -> None:
     """tmp + fsync + rename + directory fsync: after this returns, ``path``
     holds either its previous content or ``data`` in full — never a prefix."""
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(data)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
-    _fsync_dir(os.path.dirname(path))
+    tracer = get_tracer()
+    with tracer.span("ckpt.write", file=os.path.basename(path),
+                     bytes=len(data)):
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            with tracer.span("ckpt.fsync", file=os.path.basename(path)):
+                os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(path))
 
 
 # ---------------------------------------------------------------------------
@@ -153,19 +159,20 @@ def save_checkpoint(path: str, tree: PyTree, meta: Optional[Dict] = None) -> str
     manifest (the commit record) last — a crash between the two leaves a
     directory ``load_checkpoint`` rejects with ``CheckpointMissingError``.
     """
-    os.makedirs(path, exist_ok=True)
-    flat = _flatten_with_paths(tree)
-    buf = io.BytesIO()
-    np.savez(buf, **flat)
-    _atomic_write(os.path.join(path, "arrays.npz"), buf.getvalue())
-    manifest = {
-        "version": MANIFEST_VERSION,
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                   for k, v in flat.items()},
-        "meta": meta or {},
-    }
-    _atomic_write(os.path.join(path, "manifest.json"),
-                  json.dumps(manifest, indent=2).encode("utf-8"))
+    with get_tracer().span("ckpt.save", path=os.path.basename(path)):
+        os.makedirs(path, exist_ok=True)
+        flat = _flatten_with_paths(tree)
+        buf = io.BytesIO()
+        np.savez(buf, **flat)
+        _atomic_write(os.path.join(path, "arrays.npz"), buf.getvalue())
+        manifest = {
+            "version": MANIFEST_VERSION,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+            "meta": meta or {},
+        }
+        _atomic_write(os.path.join(path, "manifest.json"),
+                      json.dumps(manifest, indent=2).encode("utf-8"))
     return path
 
 
@@ -200,7 +207,8 @@ def load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
     manifest = load_manifest(path)
     apath = os.path.join(path, "arrays.npz")
     try:
-        with np.load(apath) as data:
+        with get_tracer().span("ckpt.load", path=os.path.basename(path)), \
+                np.load(apath) as data:
             flat = {k: data[k] for k in data.files}
     except FileNotFoundError:
         raise CheckpointMissingError(

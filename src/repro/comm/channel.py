@@ -31,6 +31,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.obs import get_registry
+
 
 @dataclasses.dataclass
 class LinkStats:
@@ -79,6 +81,12 @@ class Channel:
     def __init__(self):
         self.uplink = LinkStats()
         self.downlink = LinkStats()
+        # Control-plane bytes (headers, acks, heartbeats, metric frames):
+        # billed here, NOT into LinkStats — "bytes per round" stays pure
+        # data-frame bytes, but the overhead is still part of the ledger
+        # so reports can surface it instead of dropping it.
+        self.overhead_up = 0
+        self.overhead_down = 0
         self._round = 0
 
     @property
@@ -96,13 +104,18 @@ class Channel:
         """Both directions' ``LinkStats.snapshot()`` — the byte ledger a
         full-state checkpoint carries."""
         return {"uplink": self.uplink.snapshot(),
-                "downlink": self.downlink.snapshot()}
+                "downlink": self.downlink.snapshot(),
+                "overhead_up": int(self.overhead_up),
+                "overhead_down": int(self.overhead_down)}
 
     def restore_ledger(self, d: dict) -> None:
         """Reinstate a ``ledger()`` snapshot; the next ``begin_round``
-        continues the restored round numbering."""
+        continues the restored round numbering. Overhead keys default to 0
+        for ledgers written before they existed."""
         self.uplink.restore(d["uplink"])
         self.downlink.restore(d["downlink"])
+        self.overhead_up = int(d.get("overhead_up", 0))
+        self.overhead_down = int(d.get("overhead_down", 0))
         self._round = max(len(self.uplink.per_round) - 1, 0)
 
 
@@ -170,6 +183,16 @@ class FaultyChannel:
         self.corrupted = 0
         self.dropped_per_round: List[int] = []
         self.corrupted_per_round: List[int] = []
+        # pull-model meters: /metrics and metrics.jsonl render the live
+        # fault buckets without shadow-counting them
+        get_registry().register_source("channel.faults", self.fault_stats)
+
+    def fault_stats(self) -> dict:
+        return {"dropped": int(self.dropped),
+                "corrupted": int(self.corrupted),
+                "dropped_per_round": [int(x) for x in self.dropped_per_round],
+                "corrupted_per_round":
+                    [int(x) for x in self.corrupted_per_round]}
 
     # accounting passthrough
     @property

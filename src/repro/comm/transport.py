@@ -82,18 +82,21 @@ import numpy as np
 
 from repro.comm.channel import Channel
 from repro.comm.frame import FrameError, parse_header
+from repro.obs import get_registry, get_tracer
 
 # message types (u8 on the wire; append only, never renumber)
 MSG_HELLO = 0        # worker -> server: u32 client id
 MSG_SETUP = 1        # server -> worker: JSON setup blob
 MSG_ROUND = 2        # server -> worker: u32 round | u8 flags | params frame
 MSG_FRAME = 3        # worker -> server: one codec frame
-MSG_HEARTBEAT = 4    # worker -> server: liveness tick (empty body)
+MSG_HEARTBEAT = 4    # worker -> server: liveness tick; body is empty (legacy)
+#                      or u64 LE worker monotonic_ns (clock-offset estimation)
 MSG_RESEND = 5       # server -> worker: u32 round — re-send that frame
 MSG_ACK = 6          # server -> worker: u32 round | u8 delivered
 MSG_EF_REQ = 7       # server -> worker: dump your EF residual (empty body)
 MSG_EF_DUMP = 8      # worker -> server: raw f32 EF leaf stream
-MSG_METRIC = 9       # worker -> server: u32 round | f32 local loss
+MSG_METRIC = 9       # worker -> server: u32 round | f32 local loss, then
+#                      optionally a JSON span batch (see repro.obs.trace)
 MSG_STOP = 10        # server -> worker: shut down (empty body)
 MSG_EF_PUSH = 11     # worker -> server: u32 committed round | f32 EF stream
 MSG_EF_SYNC = 12     # server -> worker: u32 banked round | f32 EF stream
@@ -170,8 +173,8 @@ class SocketServer(Channel):
         self.heartbeat_s = heartbeat_s
         self.liveness_timeout_s = liveness_timeout_s
         self.rx_filter = rx_filter
-        self.overhead_up = 0         # control-message bytes, never LinkStats
-        self.overhead_down = 0
+        # overhead_up/overhead_down (control-message bytes, never LinkStats)
+        # live on the Channel base so they ride in ledger() with the rest
         self._lsock = socket.create_server(address)
         self._conns: Dict[int, socket.socket] = {}
         self._send_locks: Dict[int, threading.Lock] = {}
@@ -186,6 +189,16 @@ class SocketServer(Channel):
         self._ef_bank: Dict[int, Tuple[int, bytes]] = {}
         self._setup: Optional[bytes] = None
         self._metrics: Dict[Tuple[int, int], float] = {}
+        # spans piggybacked on MSG_METRIC, still on each worker's own clock
+        self._worker_spans: Dict[int, List[dict]] = {}
+        # cid -> min(server_mono_ns_at_recv - worker_heartbeat_ts): the
+        # tightest heartbeat bounds offset + one-way latency from above,
+        # so min over samples ≈ the clock offset (latency inflates, never
+        # deflates, the estimate)
+        self._clock_offset_ns: Dict[int, int] = {}
+        self._hb_prev: Dict[int, float] = {}
+        self._meters = get_registry()
+        self._meters.register_source("transport.ledger", self.ledger)
         self._lock = threading.Lock()
         self._bank_cv = threading.Condition(self._lock)
         self._stopping = False
@@ -210,7 +223,11 @@ class SocketServer(Channel):
 
     def _mark_dead(self, cid: int):
         with self._lock:
+            was_dead = cid in self._dead
             self._dead.add(cid)
+        if not was_dead:
+            self._meters.counter("transport.liveness.dead").inc()
+            get_tracer().event("liveness.dead", client=cid)
 
     def live_workers(self) -> List[int]:
         """Clients currently connected, not EOF'd, and heartbeating within
@@ -257,7 +274,23 @@ class SocketServer(Channel):
                 with self._lock:
                     self._last_seen[cid] = time.monotonic()
                 if mtype == MSG_HEARTBEAT:
-                    self.overhead_up += _HDR.size
+                    self.overhead_up += _HDR.size + len(body)
+                    now_mono = time.monotonic()
+                    if len(body) >= 8:
+                        # timestamped heartbeat: tighten the clock-offset
+                        # estimate (min over samples, see _clock_offset_ns)
+                        (wts,) = struct.unpack_from("<Q", body)
+                        off = time.monotonic_ns() - wts
+                        with self._lock:
+                            prev = self._clock_offset_ns.get(cid)
+                            if prev is None or off < prev:
+                                self._clock_offset_ns[cid] = off
+                    prev_beat = self._hb_prev.get(cid)
+                    self._hb_prev[cid] = now_mono
+                    if prev_beat is not None:
+                        self._meters.histogram(
+                            "transport.heartbeat_interval_s").observe(
+                                now_mono - prev_beat)
                 elif mtype == MSG_EF_DUMP:
                     self.overhead_up += _HDR.size + len(body)
                     with self._lock:
@@ -271,11 +304,22 @@ class SocketServer(Channel):
                     with self._bank_cv:
                         self._ef_bank[cid] = (rnd, body[4:])
                         self._bank_cv.notify_all()
-                elif mtype == MSG_METRIC and len(body) == 8:
-                    self.overhead_up += _HDR.size + 8
-                    rnd, loss = struct.unpack("<If", body)
+                elif mtype == MSG_METRIC and len(body) >= 8:
+                    self.overhead_up += _HDR.size + len(body)
+                    rnd, loss = struct.unpack_from("<If", body)
+                    spans: List[dict] = []
+                    if len(body) > 8:
+                        # piggybacked span batch (worker-local clock); a
+                        # malformed batch loses spans, never the metric
+                        try:
+                            spans = json.loads(body[8:].decode("utf-8"))
+                        except (UnicodeDecodeError, ValueError):
+                            spans = []
                     with self._lock:
                         self._metrics[(rnd, cid)] = loss
+                        if spans:
+                            self._worker_spans.setdefault(
+                                cid, []).extend(spans)
                 elif mtype == MSG_FRAME:
                     self.overhead_up += _HDR.size
                     self._rx.put((cid, body))
@@ -409,6 +453,8 @@ class SocketServer(Channel):
             if n:
                 self.downlink._record(len(b))
                 self.overhead_down += n - len(b)
+                get_tracer().event("tx_frame", round=round_idx, client=cid,
+                                   bytes=len(b))
         return participate
 
     def collect(self, round_idx: int, expected, *, policy,
@@ -436,13 +482,21 @@ class SocketServer(Channel):
         pending = {i: [0, start + policy.timeout(0)]
                    for i in range(N) if expected[i] and not self._is_dead(i)}
 
+        tracer = get_tracer()
+
         def bump(cid: int, now: float):
             nonlocal retries
             attempt = pending[cid][0]
             if attempt >= policy.max_retries:
                 del pending[cid]                     # give up: undelivered
+                self._meters.counter("transport.give_up").inc()
+                tracer.event("retry.give_up", round=round_idx, client=cid,
+                             attempts=attempt)
                 return
             retries += 1
+            self._meters.counter("transport.resend").inc()
+            tracer.event("retry.resend", round=round_idx, client=cid,
+                         attempt=attempt + 1)
             self._send_or_bury(cid, MSG_RESEND, struct.pack("<I", round_idx))
             self.overhead_down += _HDR.size + 4
             pending[cid] = [attempt + 1, now + policy.timeout(attempt + 1)]
@@ -466,11 +520,17 @@ class SocketServer(Channel):
             now = time.monotonic()
             if body is None:
                 continue                             # death sentinel
+            # bill on receipt, then trace with the final outcome tag: every
+            # uplink._record has exactly one rx_frame event carrying the
+            # billed byte count, so trace sums reconcile with the ledger
             self.uplink._record(len(body))
+            nbytes = len(body)
             buf = np.frombuffer(body, np.uint8)
             if self.rx_filter is not None:
                 buf = self.rx_filter(cid, round_idx, buf)
                 if buf is None:
+                    tracer.event("rx_frame", round=round_idx, client=cid,
+                                 bytes=nbytes, outcome="filtered")
                     continue                         # eaten: timer will fire
             ok, stale = False, False
             try:
@@ -480,12 +540,19 @@ class SocketServer(Channel):
             except FrameError:
                 ok = False
             if stale or cid not in pending:
+                tracer.event("rx_frame", round=round_idx, client=cid,
+                             bytes=nbytes,
+                             outcome="stale" if stale else "late")
                 continue                 # late/duplicate: billed, discarded
             if ok:
                 frames[cid] = np.array(buf, np.uint8)
                 delivered[cid] = True
                 del pending[cid]
+                tracer.event("rx_frame", round=round_idx, client=cid,
+                             bytes=nbytes, outcome="ok")
             else:
+                tracer.event("rx_frame", round=round_idx, client=cid,
+                             bytes=nbytes, outcome="corrupt")
                 bump(cid, now)                       # corrupt: retry now
         return DeliveryReport(frames, delivered, retries)
 
@@ -505,6 +572,23 @@ class SocketServer(Channel):
         with self._lock:
             keys = [k for k in self._metrics if k[0] == round_idx]
             return {cid: self._metrics.pop((rnd, cid)) for rnd, cid in keys}
+
+    def clock_offsets(self) -> Dict[str, int]:
+        """Per-worker ``server_clock - worker_clock`` estimates (ns), keyed
+        by the worker's trace proc label — feed :func:`~repro.obs.merge_traces`
+        together with :meth:`pop_worker_spans`."""
+        with self._lock:
+            return {f"client-{cid}": off
+                    for cid, off in self._clock_offset_ns.items()}
+
+    def pop_worker_spans(self) -> Dict[str, List[dict]]:
+        """Drain the spans workers piggybacked on MSG_METRIC, keyed by
+        trace proc label, still on each worker's own clock."""
+        with self._lock:
+            out = {f"client-{cid}": spans
+                   for cid, spans in self._worker_spans.items()}
+            self._worker_spans = {}
+        return out
 
     def request_ef(self, cid: int, timeout: float = 30.0) -> Optional[np.ndarray]:
         """Ask one worker for its committed EF residual (flat f32 leaf
@@ -531,6 +615,7 @@ class SocketServer(Channel):
         if self._stopping:
             return
         self._stopping = True
+        self._meters.unregister_source("transport.ledger")
         for cid in list(self._conns):
             self._send_or_bury(cid, MSG_STOP)
         try:
@@ -592,7 +677,10 @@ class ServerLink:
             while not self._closed:
                 time.sleep(heartbeat_s)
                 try:
-                    self.send(MSG_HEARTBEAT)
+                    # timestamped tick: the server turns these into a
+                    # clock-offset estimate for cross-process trace merge
+                    self.send(MSG_HEARTBEAT,
+                              struct.pack("<Q", time.monotonic_ns()))
                 except (ConnectionError, OSError):
                     return
         threading.Thread(target=beat, daemon=True).start()

@@ -92,6 +92,7 @@ import numpy as np
 
 from repro.fl.round import FLState, RoundMetrics, fl_init
 from repro.fl.server import server_update
+from repro.obs import get_registry, get_tracer
 
 PyTree = Any
 # batch_fn(data_key, round_idx) -> per-client stacked batch pytree (N, K, B, ...)
@@ -317,25 +318,34 @@ class RoundEngine:
         """
         from repro.comm.frame import FrameError, parse_header
 
+        tracer = get_tracer()
         out: List[Any] = []
         delivered = np.zeros((len(frames),), bool)
         retries = 0
-        for i, buf in enumerate(frames):
-            got = None
-            for attempt in range(policy.max_retries + 1):
-                if attempt > 0:
-                    retries += 1
-                wire = channel.send_up(buf)
-                if wire is None:
-                    continue
-                try:
-                    parse_header(wire)
-                except FrameError:
-                    continue
-                got = wire
-                break
-            out.append(got)
-            delivered[i] = got is not None
+        with tracer.span("engine.deliver", clients=len(frames)) as sp:
+            for i, buf in enumerate(frames):
+                got = None
+                for attempt in range(policy.max_retries + 1):
+                    if attempt > 0:
+                        retries += 1
+                        tracer.event("retry.resend", client=i,
+                                     attempt=attempt)
+                    wire = channel.send_up(buf)
+                    if wire is None:
+                        continue
+                    try:
+                        parse_header(wire)
+                    except FrameError:
+                        continue
+                    got = wire
+                    break
+                out.append(got)
+                delivered[i] = got is not None
+                if got is None:
+                    tracer.event("retry.give_up", client=i,
+                                 attempts=policy.max_retries)
+            sp.end(delivered=int(delivered.sum()), retries=retries)
+        get_registry().counter("engine.deliver.retries").inc(retries)
         return DeliveryReport(out, delivered, retries)
 
     # -- the round body (shared by scan and reference loop) ----------------
@@ -372,10 +382,19 @@ class RoundEngine:
                   length: int) -> Tuple[FLState, RoundMetrics]:
         """``length`` rounds in ONE dispatch; the input ``state`` is consumed
         (donated) — use only the returned state. The stacked metrics come
-        back via a single ``device_get`` (the block's one host sync)."""
-        state, ms = self._block(length)(state)
+        back via a single ``device_get`` (the block's one host sync).
+
+        Span tags use the engine's host-side round counter, never
+        ``state.round`` — reading the device counter here would force an
+        extra sync and corrupt the very dispatch/sync accounting this
+        path is gated on."""
+        tracer = get_tracer()
+        r0 = self.stats.rounds
+        with tracer.span("engine.dispatch", block=length, rounds_done=r0):
+            state, ms = self._block(length)(state)
         self.stats.dispatches += 1
-        ms = jax.device_get(ms)
+        with tracer.span("engine.sync", block=length, rounds_done=r0):
+            ms = jax.device_get(ms)
         self.stats.host_syncs += 1
         self.stats.rounds += length
         return state, ms
@@ -545,33 +564,71 @@ class LiveRoundLoop:
         N = self.cfg.fl.num_clients
         dl = self.cfg.round_deadline_s if deadline_s is None else deadline_s
         pol = self.policy if policy is None else policy
+        tracer = get_tracer()
+        meters = get_registry()
         for _ in range(num_rounds):
             r = self.server.begin_round()
+            oh0 = (self.server.overhead_up, self.server.overhead_down)
             t0 = time.perf_counter()
-            down = np.asarray(self._enc(self.params, jnp.uint32(r)))
-            part = (np.ones((N,), bool) if self.participate_fn is None
-                    else np.asarray(self.participate_fn(r), bool))
-            self.server.broadcast_round(r, down, part)
-            live = np.zeros((N,), bool)
-            live[self.server.live_workers()] = True
-            rep = self.server.collect(
-                r, part & live, policy=pol, deadline_s=dl)
-            self.server.send_acks(r, rep.delivered)
-            bufs = np.stack(
-                [np.asarray(f, np.uint8) if f is not None
-                 else self._placeholder for f in rep.frames])
-            self.params = self._step(self.params, jnp.asarray(bufs),
-                                     jnp.asarray(rep.delivered))
-            jax.block_until_ready(self.params)
+            with tracer.span("round", round=r, deadline_s=dl) as round_sp:
+                with tracer.span("round.encode", round=r,
+                                 phase="encode") as enc_sp:
+                    down = np.asarray(self._enc(self.params, jnp.uint32(r)))
+                    enc_sp.end(bytes=int(down.nbytes))
+                part = (np.ones((N,), bool) if self.participate_fn is None
+                        else np.asarray(self.participate_fn(r), bool))
+                with tracer.span("round.broadcast", round=r,
+                                 phase="broadcast"):
+                    self.server.broadcast_round(r, down, part)
+                live = np.zeros((N,), bool)
+                live[self.server.live_workers()] = True
+                with tracer.span("round.collect", round=r, phase="collect",
+                                 deadline_s=dl) as col_sp:
+                    rep = self.server.collect(
+                        r, part & live, policy=pol, deadline_s=dl)
+                    col_sp.end(delivered=int(rep.delivered.sum()),
+                               retries=rep.retries)
+                with tracer.span("round.ack", round=r, phase="ack"):
+                    self.server.send_acks(r, rep.delivered)
+                with tracer.span("round.aggregate", round=r,
+                                 phase="aggregate"):
+                    bufs = np.stack(
+                        [np.asarray(f, np.uint8) if f is not None
+                         else self._placeholder for f in rep.frames])
+                    self.params = self._step(self.params, jnp.asarray(bufs),
+                                             jnp.asarray(rep.delivered))
+                    jax.block_until_ready(self.params)
+                dead = sorted(set(range(N))
+                              - set(self.server.live_workers()))
+                # one outcome tag per client per round: what the trace
+                # analyzer attributes stragglers / drops / deaths from
+                for cid in range(N):
+                    if not part[cid]:
+                        outcome = "sat_out"
+                    elif rep.delivered[cid]:
+                        outcome = "delivered"
+                    elif cid in dead:
+                        outcome = "dead"
+                    else:
+                        outcome = "undelivered"
+                    tracer.event("round.outcome", round=r, client=cid,
+                                 outcome=outcome)
+                round_sp.end(delivered=int(rep.delivered.sum()),
+                             retries=rep.retries)
+            wall_s = time.perf_counter() - t0
+            meters.counter("loop.rounds").inc()
+            meters.gauge("loop.round").set(r)
+            meters.histogram("loop.round_wall_s").observe(wall_s)
             rec = {"round": r,
-                   "wall_s": time.perf_counter() - t0,
+                   "wall_s": wall_s,
                    "participate": part,
                    "delivered": rep.delivered.copy(),
                    "retries": rep.retries,
                    "bytes_up": self.server.uplink.per_round[-1],
                    "bytes_down": self.server.downlink.per_round[-1],
-                   "dead": sorted(set(range(N))
-                                  - set(self.server.live_workers())),
+                   "overhead_up": self.server.overhead_up - oh0[0],
+                   "overhead_down": self.server.overhead_down - oh0[1],
+                   "dead": dead,
                    "losses": self.server.pop_metrics(r)}
             self.history.append(rec)
             if self.on_round is not None:

@@ -52,6 +52,74 @@ from repro.launch.mesh import make_host_mesh
 from repro.models.build import build_model, syn_loss_fn, syn_spec_for, vision_syn_spec
 from repro.models.cnn import DATASETS, accuracy, make_paper_model
 from repro.models.encdec import EncDec
+from repro.obs import (configure_tracer, get_registry, get_tracer,
+                       merge_traces, write_chrome_trace)
+
+
+class _ProfileWindow:
+    """``jax.profiler`` capture over a round window ``[start, stop)``.
+
+    Drive it with ``maybe_start(next_round)`` before rounds begin and
+    ``after_round(completed_round)`` at round boundaries; ``close()``
+    guarantees a started capture is stopped. On the socket transport the
+    window is exact (the loop reports every round); on the in-process
+    engine rounds live inside scanned blocks, so the window snaps to
+    eval-block boundaries."""
+
+    def __init__(self, out_dir: str, start: int, stop: int):
+        self.dir, self.a, self.b = out_dir, start, stop
+        self.on = False
+        self.done = False
+
+    def maybe_start(self, next_round: int) -> None:
+        if self.done or self.on or not (self.a <= next_round < self.b):
+            return
+        os.makedirs(self.dir, exist_ok=True)
+        jax.profiler.start_trace(self.dir)
+        self.on = True
+
+    def after_round(self, completed_round: int) -> None:
+        nxt = completed_round + 1
+        if self.on and nxt >= self.b:
+            jax.profiler.stop_trace()
+            self.on, self.done = False, True
+        self.maybe_start(nxt)
+
+    def close(self) -> None:
+        if self.on:
+            jax.profiler.stop_trace()
+            self.on, self.done = False, True
+
+
+def _make_profiler(args, r0: int):
+    if not args.profile:
+        return None
+    if args.profile_window:
+        a, b = (int(x) for x in args.profile_window.split(":", 1))
+    else:
+        a, b = r0, args.rounds
+    return _ProfileWindow(args.profile, a, b)
+
+
+def _dump_obs(out_dir: str, server=None) -> None:
+    """End-of-run observability artifacts: ``meters.json`` always; when
+    tracing is on, the merged span trace as ``trace.jsonl`` plus a
+    Chrome/Perfetto ``trace.chrome.json`` (workers' piggybacked spans are
+    shifted onto the server clock by the heartbeat offset estimates)."""
+    tracer = get_tracer()
+    if tracer.enabled:
+        records = tracer.drain()
+        if server is not None:
+            records = merge_traces(records, server.pop_worker_spans(),
+                                   server.clock_offsets())
+        with open(os.path.join(out_dir, "trace.jsonl"), "w") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+        write_chrome_trace(records, os.path.join(out_dir, "trace.chrome.json"))
+        print(f"trace -> {out_dir}/trace.jsonl ({len(records)} records, "
+              f"{tracer.dropped} dropped)")
+    with open(os.path.join(out_dir, "meters.json"), "w") as f:
+        json.dump(get_registry().snapshot(), f, indent=1)
 
 
 def make_fanout(args):
@@ -116,6 +184,8 @@ def _history_to_json(history):
              "retries": int(rec["retries"]),
              "bytes_up": int(rec["bytes_up"]),
              "bytes_down": int(rec["bytes_down"]),
+             "overhead_up": int(rec.get("overhead_up", 0)),
+             "overhead_down": int(rec.get("overhead_down", 0)),
              "dead": [int(c) for c in rec["dead"]],
              "losses": {str(k): float(v) for k, v in rec["losses"].items()}}
             for rec in history]
@@ -167,13 +237,17 @@ def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
         server.restore_ledger(meta["ledger"])  # round numbering continues
         server.seed_ef_bank(bank)
     procs = spawn_local_workers(server.address, range(args.clients))
+    profiler = _make_profiler(args, r0)
     try:
         server.wait_ready()
         server.send_setup(vision_setup(run, model=args.model, spec=spec,
-                                       train_size=args.train_size))
+                                       train_size=args.train_size,
+                                       trace=args.trace))
         mode = "a" if args.resume else "w"
         with open(os.path.join(args.out, "metrics.jsonl"), mode) as log:
             def on_round(rec, rep):
+                if profiler is not None:
+                    profiler.after_round(rec["round"])
                 r = rec["round"] + 1
                 if r % args.eval_every and r != args.rounds:
                     return
@@ -184,6 +258,9 @@ def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
                        "delivered": int(rec["delivered"].sum()),
                        "retries": rec["retries"],
                        "bytes_up": rec["bytes_up"],
+                       "bytes_down": rec["bytes_down"],
+                       "overhead_up": rec["overhead_up"],
+                       "overhead_down": rec["overhead_down"],
                        "wall_s": round(rec["wall_s"], 4),
                        "elapsed_s": round(time.time() - t0, 1)}
                 print(json.dumps(out))
@@ -225,6 +302,8 @@ def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
             # then enforce the configured deadline/backoff after that.
             remaining = args.rounds - r0
             boot = max(run.round_deadline_s, 300.0)
+            if profiler is not None:
+                profiler.maybe_start(r0)
             if remaining > 0:
                 loop.run(1, deadline_s=boot,
                          policy=RetryPolicy(max_retries=0,
@@ -235,7 +314,10 @@ def train_vision_socket(args, *, spec, model, params, strategy, run, codec):
             if args.ckpt_every and mgr.latest() != args.rounds:
                 # final recovery point (cadence may not divide --rounds)
                 ckpt_fn(loop, args.rounds - 1)
+        _dump_obs(args.out, server=server)
     finally:
+        if profiler is not None:
+            profiler.close()
         server.stop()
         for p in procs:
             try:
@@ -308,9 +390,14 @@ def train_vision(args):
 
     _write_run_config(args.out, run)
     t0 = time.time()
+    profiler = _make_profiler(args, r0)
+    if profiler is not None:
+        profiler.maybe_start(r0)
     with open(os.path.join(args.out, "metrics.jsonl"),
               "a" if args.resume else "w") as log:
         def on_eval(st, m, r):
+            if profiler is not None:
+                profiler.after_round(r0 + r - 1)
             rec = {"round": r0 + r, "loss": float(m.loss[-1]),
                    "acc": float(eval_acc(st.params)),
                    "cos": float(np.mean(m.cosine[-1])),
@@ -323,10 +410,15 @@ def train_vision(args):
         def ckpt_fn(st, rnd):
             save_fl_checkpoint(mgr, rnd, st, run=run, extra=meta_extra)
 
-        state, _ = engine.run(state, args.rounds - r0,
-                              eval_every=args.eval_every, eval_fn=on_eval,
-                              ckpt_every=args.ckpt_every,
-                              ckpt_fn=ckpt_fn if args.ckpt_every else None)
+        try:
+            state, _ = engine.run(state, args.rounds - r0,
+                                  eval_every=args.eval_every, eval_fn=on_eval,
+                                  ckpt_every=args.ckpt_every,
+                                  ckpt_fn=ckpt_fn if args.ckpt_every else None)
+        finally:
+            if profiler is not None:
+                profiler.close()
+    _dump_obs(args.out)
     if args.ckpt_every and mgr.latest() != args.rounds:
         save_fl_checkpoint(mgr, args.rounds, state, run=run, extra=meta_extra)
     save_checkpoint(os.path.join(args.out, "final"), state.params,
@@ -398,6 +490,7 @@ def main(argv=None):
     ap.add_argument("--train-size", type=int, default=4000, dest="train_size")
     ap.add_argument("--eval-every", type=int, default=10, dest="eval_every")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="experiments/train_run")
     ap.add_argument("--client-parallel", default="auto", dest="client_parallel",
                     choices=["auto", "vmap", "shard_map"],
                     help="client fan-out: sharded over the host mesh "
@@ -463,12 +556,42 @@ def main(argv=None):
                          "use the same configuration, replays the remaining "
                          "rounds bitwise, and appends to the existing "
                          "metrics JSONL")
-    ap.add_argument("--out", default="experiments/train_run")
+    # observability (repro.obs): host-side span tracing, metrics endpoints,
+    # device-timeline profiling
+    ap.add_argument("--trace", action="store_true",
+                    help="record host-side spans (server round phases, "
+                         "transport framing, checkpoint I/O; socket workers "
+                         "piggyback theirs over MSG_METRIC) and write "
+                         "<out>/trace.jsonl + trace.chrome.json")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR "
+                         "(view with TensorBoard or Perfetto)")
+    ap.add_argument("--profile-window", default=None, metavar="A:B",
+                    dest="profile_window",
+                    help="restrict --profile to absolute rounds [A, B); "
+                         "exact on --transport socket, snaps to eval-block "
+                         "boundaries in-process")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    dest="metrics_port",
+                    help="serve /healthz and /metrics (the obs.meters "
+                         "snapshot) on this port for the run's duration "
+                         "(0 picks a free port)")
     args = ap.parse_args(argv)
-    if args.arch and args.smoke:
-        train_lm_smoke(args)
-    else:
-        train_vision(args)
+    if args.trace:
+        configure_tracer(True, proc="server")
+    http = None
+    if args.metrics_port is not None:
+        from repro.obs.http import ObsHTTPServer
+        http = ObsHTTPServer(port=args.metrics_port)
+        print(f"metrics -> {http.url}/metrics")
+    try:
+        if args.arch and args.smoke:
+            train_lm_smoke(args)
+        else:
+            train_vision(args)
+    finally:
+        if http is not None:
+            http.stop()
 
 
 if __name__ == "__main__":

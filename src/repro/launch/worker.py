@@ -71,6 +71,7 @@ from repro.comm.transport import (FLAG_PARTICIPATE, MSG_ACK, MSG_EF_DUMP,
                                   MSG_EF_PUSH, MSG_EF_REQ, MSG_EF_SYNC,
                                   MSG_FRAME, MSG_METRIC, MSG_RESEND,
                                   MSG_ROUND, MSG_SETUP, MSG_STOP, ServerLink)
+from repro.obs import configure_tracer, get_logger, get_tracer
 
 PyTree = Any
 
@@ -81,11 +82,13 @@ _BOOT_HEARTBEAT_S = 0.2
 
 
 def vision_setup(run, *, model: str, spec, train_size: int,
-                 straggle: Optional[Dict[int, float]] = None) -> Dict:
+                 straggle: Optional[Dict[int, float]] = None,
+                 trace: bool = False) -> Dict:
     """The SETUP blob for a vision run — everything a worker needs to
     rebuild the client computation, JSON-serializable. One construction
     shared by the training CLI, the transport bench and the tests so the
-    blob's schema cannot drift between drivers."""
+    blob's schema cannot drift between drivers. ``trace=True`` turns on
+    the worker-side span recorder (spans ride back on MSG_METRIC)."""
     return {
         "kind": "vision",
         "model": model,
@@ -93,6 +96,7 @@ def vision_setup(run, *, model: str, spec, train_size: int,
         "train_size": int(train_size),
         "run": run.to_json(),
         "straggle": {str(k): float(v) for k, v in (straggle or {}).items()},
+        "trace": bool(trace),
     }
 
 
@@ -251,12 +255,20 @@ def build_compute(setup: Dict, client_id: int):
 
 
 def _serve(link: ServerLink, compute, client_id: int,
-           straggle_s: float) -> None:
+           straggle_s: float, log=None) -> None:
     """The worker's message loop: ROUND -> compute/frame/metric, RESEND ->
     re-send the cached frame, ACK -> commit the EF branch, EF_REQ -> dump,
     STOP -> exit. Single-threaded on purpose (besides the heartbeat): the
     protocol is strictly ordered per connection, so there is nothing to
-    race."""
+    race.
+
+    When the process tracer is enabled (SETUP ``trace``), the round's
+    decode/compute/straggle spans are drained and piggybacked on the
+    MSG_METRIC body — they reach the server in-band, on this worker's own
+    clock, for offset-shifted merge into the server trace."""
+    if log is None:
+        log = get_logger("worker", client=client_id)
+    tracer = get_tracer()
     last_frame: Optional[bytes] = None
     last_round = -1
 
@@ -268,32 +280,53 @@ def _serve(link: ServerLink, compute, client_id: int,
         if staged is None:
             return
         compute.commit(delivered=delivered)
-        link.send(MSG_EF_PUSH,
-                  struct.pack("<I", staged) + compute.ef_bytes())
+        stream = compute.ef_bytes()
+        link.send(MSG_EF_PUSH, struct.pack("<I", staged) + stream)
+        tracer.event("ef_push", round=staged, bytes=len(stream),
+                     delivered=delivered)
 
     while True:
         mtype, body = link.recv()
         if mtype == MSG_STOP:
+            log.info("stop received, exiting")
             return
         if mtype == MSG_ROUND:
             rnd, flags = struct.unpack_from("<IB", body)
+            rlog = log.bind(round=rnd)
             # a still-staged previous round means the server moved on
             # without acking us — it necessarily gave up on our frame
             commit_and_push(delivered=False)
             if not flags & FLAG_PARTICIPATE:
                 last_frame, last_round = None, rnd
+                rlog.debug("sitting round out")
                 continue                     # sit the round out; EF frozen
-            params = compute.decode_params(body[5:])
-            frame, loss = compute.compute(params, rnd)
+            with tracer.span("worker.decode", round=rnd, phase="decode",
+                             bytes=len(body) - 5):
+                params = compute.decode_params(body[5:])
+            with tracer.span("worker.compute", round=rnd, phase="compute"):
+                frame, loss = compute.compute(params, rnd)
             if straggle_s > 0:
-                time.sleep(straggle_s)       # alive (heartbeats), just late
-            link.send(MSG_METRIC, struct.pack("<If", rnd, loss))
-            link.send(MSG_FRAME, frame)
+                with tracer.span("worker.straggle", round=rnd,
+                                 phase="straggle", sleep_s=straggle_s):
+                    time.sleep(straggle_s)   # alive (heartbeats), just late
+            payload = struct.pack("<If", rnd, loss)
+            spans = tracer.drain()
+            if spans:
+                payload += json.dumps(spans).encode("utf-8")
+            link.send(MSG_METRIC, payload)
+            with tracer.span("worker.send", round=rnd, phase="send",
+                             bytes=len(frame)):
+                link.send(MSG_FRAME, frame)
             last_frame, last_round = frame, rnd
+            rlog.debug("served: loss=%.4f frame=%dB", loss, len(frame))
         elif mtype == MSG_RESEND:
             (rnd,) = struct.unpack("<I", body)
             if last_frame is not None and rnd == last_round:
+                tracer.event("worker.resend", round=rnd,
+                             bytes=len(last_frame))
                 link.send(MSG_FRAME, last_frame)
+                log.bind(round=rnd).info("re-sent frame (%dB)",
+                                         len(last_frame))
         elif mtype == MSG_ACK:
             rnd, delivered = struct.unpack("<IB", body)
             if compute.pending_round() == rnd:
@@ -304,12 +337,17 @@ def _serve(link: ServerLink, compute, client_id: int,
             # server-held residual (rejoin/resume): install and continue
             # from exactly where the previous incarnation committed
             compute.install_ef(body[4:])
+            tracer.event("ef_sync", bytes=len(body) - 4)
+            log.info("EF residual re-synced from server (%dB)",
+                     len(body) - 4)
         # unknown/duplicate control messages are ignored: the server owns
         # the protocol version, the worker just serves what it understands
 
 
 def run_worker(address, client_id: int) -> None:
+    log = get_logger("worker", client=client_id)
     link = ServerLink.connect(tuple(address), client_id)
+    log.info("connected to %s:%s", *tuple(address))
     # look alive immediately — SETUP parsing and jit compilation happen
     # before the configured heartbeat is known
     link.start_heartbeat(_BOOT_HEARTBEAT_S)
@@ -321,14 +359,20 @@ def run_worker(address, client_id: int) -> None:
                 return
             if mtype == MSG_SETUP:
                 setup = json.loads(body.decode("utf-8"))
+        if setup.get("trace"):
+            configure_tracer(True, proc=f"client-{client_id}")
+        t0 = time.monotonic()
         compute = build_compute(setup, client_id)
+        log.info("computation rebuilt in %.1fs", time.monotonic() - t0)
         hb = compute.run.heartbeat_s
         if hb < _BOOT_HEARTBEAT_S:
             link.start_heartbeat(hb)         # beat faster than configured
         straggle_s = float(setup.get("straggle", {}).get(str(client_id), 0.0))
-        _serve(link, compute, client_id, straggle_s)
+        if straggle_s > 0:
+            log.info("induced straggle: %.2fs per round", straggle_s)
+        _serve(link, compute, client_id, straggle_s, log=log)
     except (ConnectionError, OSError):
-        pass                                 # server went away: clean exit
+        log.info("server connection lost, exiting")
     finally:
         link.close()
 

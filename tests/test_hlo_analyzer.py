@@ -125,3 +125,82 @@ ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
     scoped = H.collectives_in_scope(hlo, "fl_client_local")
     assert [c.kind for c in scoped] == ["all-reduce"]
     assert H.collectives_in_scope(hlo, "nonexistent_scope") == []
+
+
+# ---------------------------------------------------------------------------
+# edge cases: the analyzer is fed arbitrary optimized-HLO text by benches and
+# the dryrun cost model — degenerate modules must yield zeros, not crashes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("text", ["", "\n\n", "// no module here",
+                                  "%orphan = f32[4]{0} add(%a, %b)"])
+def test_empty_or_entryless_module(text):
+    """No ENTRY computation -> zero totals and empty extractions."""
+    tot = H.analyze(text)
+    assert tot.flops == 0.0 and tot.bytes == 0.0
+    assert all(v == 0.0 for v in tot.coll_bytes.values())
+    assert H.collectives(text) == []
+    assert H.collective_bytes(text) == 0.0
+    assert H.collectives_in_scope(text, "any") == []
+
+
+def test_no_collective_module():
+    """A real loop-free compiled program with zero collectives: flop/byte
+    totals populate, every collective bucket stays exactly zero."""
+    x = jnp.ones((64, 32))
+    w = jnp.ones((32, 16))
+    tot, _ = _cost(lambda a, b: jnp.tanh(a @ b), x, w)
+    assert tot.flops == 2 * 64 * 32 * 16
+    assert tot.bytes > 0.0
+    assert all(v == 0.0 for v in tot.coll_bytes.values())
+    comp = jax.jit(lambda a, b: jnp.tanh(a @ b)).lower(x, w).compile()
+    assert H.collectives(comp.as_text()) == []
+    assert H.collective_bytes(comp.as_text()) == 0.0
+
+
+def test_nested_scopes_and_nested_trip_counts():
+    """A collective inside a while-within-a-while under a nested name stack:
+    trip multipliers compound (2*3=6) and every enclosing named_scope level
+    matches by substring on the op_name metadata."""
+    hlo = """
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %t = (s32[], f32[8,8]) tuple(%c, %p0)
+  %w = (s32[], f32[8,8]) while(%t), condition=%ocond, body=%obody, backend_config={"known_trip_count":{"n":"2"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+%obody (a: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %a = (s32[], f32[8,8]) parameter(0)
+  %t2 = (s32[], f32[8,8]) tuple(%i, %g)
+  %w2 = (s32[], f32[8,8]) while(%t2), condition=%icond, body=%ibody, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %r = (s32[], f32[8,8]) tuple(%i, %g2)
+}
+%ibody (b: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %b = (s32[], f32[8,8]) parameter(0)
+  %g3 = f32[8,8]{1,0} get-tuple-element(%b), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%g3), to_apply=%sum, metadata={op_name="jit(f)/outer_scope/inner_scope/all_reduce"}
+  ROOT %r2 = (s32[], f32[8,8]) tuple(%j, %ar)
+}
+%ocond (a: (s32[], f32[8,8])) -> pred[] {
+  %a2 = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] compare(%x, %y), direction=LT
+}
+%icond (b: (s32[], f32[8,8])) -> pred[] {
+  %b2 = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt2 = pred[] compare(%x, %y), direction=LT
+}
+"""
+    cols = H.collectives(hlo)
+    assert len(cols) == 1                  # one op, trip-annotated
+    ar = cols[0]
+    assert ar.kind == "all-reduce"
+    assert ar.trip == 2 * 3
+    assert ar.total_bytes == 6 * 8 * 8 * 4
+    # totals walk agrees with the extraction walk
+    assert H.analyze(hlo).coll_bytes["all-reduce"] == ar.total_bytes
+    # nested scopes both match; sibling/unknown scopes do not
+    for scope in ("outer_scope", "inner_scope", "outer_scope/inner_scope"):
+        assert [c.kind for c in H.collectives_in_scope(hlo, scope)] == \
+            ["all-reduce"], scope
+    assert H.collectives_in_scope(hlo, "other_scope") == []
