@@ -75,11 +75,11 @@ def _child() -> Dict:
     from repro.data.synthetic import make_class_image_dataset
     from repro.fl.budget import matched_compressors
     from repro.fl.engine import RoundEngine, device_pools, vision_batcher
-    from repro.fl.round import CLIENT_SCOPE, build_fl_round, fl_init
+    from repro.analysis import collective_summary
+    from repro.fl.round import build_fl_round, fl_init
     from repro.fl.sharding import make_fl_shardings
     from repro.models.build import vision_syn_spec
     from repro.models.cnn import MNIST_SPEC, make_paper_model
-    from repro.utils import hlo_analyzer as H
 
     assert len(jax.devices()) == 8, \
         f"child expected 8 forced host devices, got {len(jax.devices())}"
@@ -124,18 +124,9 @@ def _child() -> Dict:
             in_shardings=(sh.state, sh.client, sh.replicated),
             out_shardings=(sh.state, sh.replicated),
         ).lower(state, batches, key).compile()
-        cols = H.collectives(compiled.as_text())
-        by_kind: Dict[str, float] = {}
-        for c in cols:
-            by_kind[c.kind] = by_kind.get(c.kind, 0.0) + c.total_bytes
-        scoped = [c for c in cols if CLIENT_SCOPE in c.op_name]
-        return {
-            "collective_bytes_per_round": sum(c.total_bytes for c in cols),
-            "collective_count": len(cols),
-            "bytes_by_kind": by_kind,
-            "encode_region_collectives": len(scoped),
-            "encode_region_ops": [c.kind for c in scoped],
-        }
+        # scope filter + byte census live ONCE, in repro.analysis — the
+        # same extraction the check_static contract matrix gates on
+        return collective_summary(compiled.as_text())
 
     print("compiling naive shard_map round...", file=sys.stderr)
     naive = wire(naive_rf)
@@ -226,13 +217,18 @@ WIDTH_STABLE = ("fedavg", "dgc", "signsgd", "stc")
 
 
 def _gate(results: Dict) -> Dict:
+    # the fused-gather bound is the contract's, stated once in
+    # repro.analysis.contracts and shared with the check_static matrix
+    from repro.analysis.contracts import (FUSED_GATHER_FACTOR,
+                                          FUSED_GATHER_SLACK_BYTES)
     naive_b = results["naive"]["collective_bytes_per_round"]
     fused_b = results["fused"]["collective_bytes_per_round"]
     exact = results["exact"]
     results["wire_ratio"] = naive_b / max(fused_b, 1.0)
     results["pass_wire_ratio"] = bool(fused_b <= 0.01 * naive_b)
     results["pass_payload_scaling"] = bool(
-        fused_b <= 2.0 * results["payload_bytes_local"] + 1024.0)
+        fused_b <= FUSED_GATHER_FACTOR * results["payload_bytes_local"]
+        + FUSED_GATHER_SLACK_BYTES)
     results["pass_encode_region_clean"] = bool(
         results["naive"]["encode_region_collectives"] == 0
         and results["fused"]["encode_region_collectives"] == 0)

@@ -54,6 +54,13 @@ version committed at git HEAD and FAILS (exit 1) on a regression:
   growth in the chaos run's rounds-to-target vs HEAD, or any ``pass_*``
   gate flipping false.
 
+* ``BENCH_static.json``: any static-analysis violation (IR contracts,
+  repo lint, protocol rules — fresh-run absolute: a violation is a bug
+  regardless of HEAD, and the ``pass`` flag must hold), any shrink vs
+  HEAD in the rules-evaluated count or in the IR combo-matrix coverage
+  (``configs_evaluated`` — the strategy × fan-out × wire matrix may only
+  grow), or ruff flipping from clean to failing while available.
+
 Artifacts present in the working tree but not at HEAD are new benches:
 reported and skipped. Exit 2 on usage/setup errors (not a git checkout,
 malformed JSON).
@@ -304,6 +311,37 @@ def check_observability(fresh, base, tol):
     return probs
 
 
+def check_static(fresh, base, tol):
+    probs = []
+    # absolute: a static-analysis violation is a bug in the commit that
+    # produced it, HEAD or not
+    v = _get(fresh, "violations")
+    if v:
+        probs.append(f"{v} static-analysis violation(s) (must be 0)")
+        for layer in ("ir", "lint", "protocol"):
+            rules = _get(fresh, f"{layer}.contracts") \
+                or _get(fresh, f"{layer}.rules") or {}
+            for rname, r in sorted(rules.items()):
+                for msg in r.get("violations", []):
+                    probs.append(f"  [{layer}/{rname}] {msg}")
+    if _get(fresh, "pass") is False and not v:
+        probs.append("pass flag is false")
+    # vs HEAD: coverage may only grow — fewer rule evaluations or a
+    # smaller IR combo matrix means an invariant silently stopped being
+    # checked
+    for field, what in (("rules_evaluated", "rule evaluations"),
+                        ("configs_evaluated", "IR matrix configs")):
+        f_v, b_v = _get(fresh, field), _get(base, field)
+        if f_v is not None and b_v is not None and f_v < b_v:
+            probs.append(f"static-analysis coverage shrank: {what} "
+                         f"{b_v} -> {f_v}")
+    if _get(base, "ruff.available") and _get(base, "ruff.exit") == 0 \
+            and _get(fresh, "ruff.available") \
+            and _get(fresh, "ruff.exit") != 0:
+        probs.append("ruff flipped from clean to failing")
+    return probs
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_round_engine.json": check_round_engine,
@@ -313,6 +351,7 @@ CHECKS = {
     "BENCH_transport.json": check_transport,
     "BENCH_recovery.json": check_recovery,
     "BENCH_observability.json": check_observability,
+    "BENCH_static.json": check_static,
 }
 
 

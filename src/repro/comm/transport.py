@@ -251,16 +251,16 @@ class SocketServer(Channel):
                 conn.close()
                 continue
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self.overhead_up += _HDR.size + 4
+            t = threading.Thread(target=self._recv_loop, args=(cid, conn),
+                                 daemon=True)
             with self._lock:
+                self.overhead_up += _HDR.size + 4
                 self._conns[cid] = conn
                 self._send_locks[cid] = threading.Lock()
                 self._last_seen[cid] = time.monotonic()
                 self._dead.discard(cid)
-            t = threading.Thread(target=self._recv_loop, args=(cid, conn),
-                                 daemon=True)
+                self._threads.append(t)
             t.start()
-            self._threads.append(t)
             if self._setup is not None:
                 # mid-run joiner (fresh, or a killed worker's restarted
                 # process): hand it the session state it missed — SETUP plus
@@ -274,7 +274,8 @@ class SocketServer(Channel):
                 with self._lock:
                     self._last_seen[cid] = time.monotonic()
                 if mtype == MSG_HEARTBEAT:
-                    self.overhead_up += _HDR.size + len(body)
+                    with self._lock:
+                        self.overhead_up += _HDR.size + len(body)
                     now_mono = time.monotonic()
                     if len(body) >= 8:
                         # timestamped heartbeat: tighten the clock-offset
@@ -292,20 +293,22 @@ class SocketServer(Channel):
                             "transport.heartbeat_interval_s").observe(
                                 now_mono - prev_beat)
                 elif mtype == MSG_EF_DUMP:
-                    self.overhead_up += _HDR.size + len(body)
                     with self._lock:
+                        self.overhead_up += _HDR.size + len(body)
                         self._ef[cid] = body
                         evt = self._ef_evt.get(cid)
                     if evt is not None:
                         evt.set()
                 elif mtype == MSG_EF_PUSH and len(body) >= 4:
-                    self.overhead_up += _HDR.size + len(body)
+                    with self._lock:
+                        self.overhead_up += _HDR.size + len(body)
                     (rnd,) = struct.unpack_from("<I", body)
                     with self._bank_cv:
                         self._ef_bank[cid] = (rnd, body[4:])
                         self._bank_cv.notify_all()
                 elif mtype == MSG_METRIC and len(body) >= 8:
-                    self.overhead_up += _HDR.size + len(body)
+                    with self._lock:
+                        self.overhead_up += _HDR.size + len(body)
                     rnd, loss = struct.unpack_from("<If", body)
                     spans: List[dict] = []
                     if len(body) > 8:
@@ -321,7 +324,8 @@ class SocketServer(Channel):
                             self._worker_spans.setdefault(
                                 cid, []).extend(spans)
                 elif mtype == MSG_FRAME:
-                    self.overhead_up += _HDR.size
+                    with self._lock:
+                        self.overhead_up += _HDR.size
                     self._rx.put((cid, body))
                 else:
                     raise ProtocolError(
@@ -373,7 +377,8 @@ class SocketServer(Channel):
         data / strategy from (see ``repro.launch.worker``). The blob is
         retained so late joiners get it too (``_send_join_state``); any
         pre-seeded EF bank entry (a resumed server) rides along."""
-        self._setup = json.dumps(setup).encode("utf-8")
+        with self._lock:
+            self._setup = json.dumps(setup).encode("utf-8")
         for cid in sorted(self._conns):
             self._send_join_state(cid)
 
@@ -394,7 +399,9 @@ class SocketServer(Channel):
         try:
             with self._send_locks[cid]:
                 for mtype, body in msgs:
-                    self.overhead_down += send_msg(conn, mtype, body)
+                    n = send_msg(conn, mtype, body)
+                    with self._lock:
+                        self.overhead_down += n
         except (ConnectionError, OSError):
             self._mark_dead(cid)
 
@@ -452,7 +459,8 @@ class SocketServer(Channel):
                 cid, MSG_ROUND, struct.pack("<IB", round_idx, flags) + b)
             if n:
                 self.downlink._record(len(b))
-                self.overhead_down += n - len(b)
+                with self._lock:
+                    self.overhead_down += n - len(b)
                 get_tracer().event("tx_frame", round=round_idx, client=cid,
                                    bytes=len(b))
         return participate
@@ -498,7 +506,8 @@ class SocketServer(Channel):
             tracer.event("retry.resend", round=round_idx, client=cid,
                          attempt=attempt + 1)
             self._send_or_bury(cid, MSG_RESEND, struct.pack("<I", round_idx))
-            self.overhead_down += _HDR.size + 4
+            with self._lock:
+                self.overhead_down += _HDR.size + 4
             pending[cid] = [attempt + 1, now + policy.timeout(attempt + 1)]
 
         while pending:
@@ -563,9 +572,11 @@ class SocketServer(Channel):
         for cid in range(self.num_clients):
             if cid not in self._conns or self._is_dead(cid):
                 continue
-            self.overhead_down += self._send_or_bury(
+            n = self._send_or_bury(
                 cid, MSG_ACK,
                 struct.pack("<IB", round_idx, int(delivered[cid])))
+            with self._lock:
+                self.overhead_down += n
 
     # -- diagnostics -------------------------------------------------------
     def pop_metrics(self, round_idx: int) -> Dict[int, float]:
@@ -600,7 +611,9 @@ class SocketServer(Channel):
         with self._lock:
             self._ef.pop(cid, None)
             self._ef_evt[cid] = evt
-        self.overhead_down += self._send_or_bury(cid, MSG_EF_REQ)
+        n = self._send_or_bury(cid, MSG_EF_REQ)
+        with self._lock:
+            self.overhead_down += n
         if not evt.wait(timeout):
             return None
         with self._lock:
@@ -612,9 +625,10 @@ class SocketServer(Channel):
 
     def stop(self) -> None:
         """STOP every worker and tear the sockets down (idempotent)."""
-        if self._stopping:
-            return
-        self._stopping = True
+        with self._lock:
+            if self._stopping:
+                return
+            self._stopping = True
         self._meters.unregister_source("transport.ledger")
         for cid in list(self._conns):
             self._send_or_bury(cid, MSG_STOP)

@@ -54,7 +54,9 @@ def heads(x: jax.Array, axis: int = -2) -> jax.Array:
     try:
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(_MESH, P(*spec)))
-    except Exception:
+    except (ValueError, TypeError):
+        # constraint rejected (mesh/aval mismatch): unsharded is correct,
+        # just slower — anything else (tracer leaks etc.) should surface
         return x
 
 

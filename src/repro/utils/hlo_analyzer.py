@@ -61,6 +61,13 @@ def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
     return out
 
 
+def _n_elems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
 def _bytes_of(type_text: str) -> int:
     total = 0
     for dt, dims in _shapes_in(type_text):
@@ -286,16 +293,24 @@ class CollectiveInstr:
     ``known_trip_count`` multipliers, so ``bytes * trip`` is the per-module
     wire bill. ``op_name`` is the jax name-stack metadata — ``named_scope``
     regions (e.g. the per-client encode region) are identified by substring
-    on it."""
+    on it. ``operands`` are ``(dtype, bytes)`` pairs in operand order — the
+    wire-dtype contract (``repro.analysis``) reads them to prove that what
+    crosses the boundary in codec mode is the framed ``u8`` stream, not a
+    float tree."""
 
     kind: str
     bytes: float
     trip: float
     op_name: str
+    operands: Tuple[Tuple[str, float], ...] = ()
 
     @property
     def total_bytes(self) -> float:
         return self.bytes * self.trip
+
+    @property
+    def dtypes(self) -> Tuple[str, ...]:
+        return tuple(dt for dt, _ in self.operands)
 
 
 def _collect_collectives(comps: Dict[str, Computation], name: str,
@@ -309,8 +324,12 @@ def _collect_collectives(comps: Dict[str, Computation], name: str,
         coll = _collective_of(ins, comp)
         if coll is not None:
             m = _OP_NAME_RE.search(ins.line)
+            ops = tuple(
+                (dt, float(_DTYPE_BYTES[dt] * _n_elems(dims)))
+                for n in _operand_names(ins.line, ins.op)
+                for dt, dims in _shapes_in(comp.types.get(n, "")))
             out.append(CollectiveInstr(coll[0], coll[1], mult,
-                                       m.group(1) if m else ""))
+                                       m.group(1) if m else "", ops))
         if ins.op in _CALLERS:
             for c in ins.called:
                 _collect_collectives(comps, c, mult * ins.trip, out, stack)

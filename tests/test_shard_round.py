@@ -355,16 +355,16 @@ def scenario_faults():
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.analysis import encode_region_collectives
     from repro.comm import make_codec
     from repro.configs.base import CompressorConfig, FLConfig
     from repro.configs.run import RunConfig
     from repro.core.strategy import make_strategy
     from repro.fl import faults as F
-    from repro.fl.round import CLIENT_SCOPE, build_fl_round, fl_init
+    from repro.fl.round import build_fl_round, fl_init
     from repro.fl.sharding import make_fl_shardings
     from repro.models.build import vision_syn_spec
     from repro.models.cnn import VisionSpec, make_paper_model
-    from repro.utils import hlo_analyzer as H
 
     mesh = jax.make_mesh((8, 1), ("data", "model"))
     sh = make_fl_shardings(mesh)
@@ -483,8 +483,8 @@ def scenario_faults():
         out_shardings=(sh.state, sh.replicated),
     ).lower(fl_init(params, N), abstract,
             jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
-    scoped = [c for c in H.collectives(compiled.as_text())
-              if CLIENT_SCOPE in c.op_name]
+    # the scope filter is the analysis contract's, defined once
+    scoped = encode_region_collectives(compiled.as_text())
     assert not scoped, \
         f"faulted client encode region grew collectives: {scoped}"
     print("ok hlo gate")
